@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle.
+
+Interpret-mode wall times are NOT TPU times — they validate plumbing and
+give relative op-count sanity; the TPU-facing numbers come from the
+dry-run roofline. Oracle (jnp) timings on CPU are the honest baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.topk_prune import topk_network
+from repro.kernels import ops, ref
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+
+    # unary top-k relocation (jnp fast path vs gate-level oracle)
+    net = topk_network("auto", 64, 2)
+    bits = jax.random.bernoulli(key, 0.05, (512, 64))
+    from repro.core import unary_ops
+    f_fast = jax.jit(lambda b: unary_ops.topk_bits_fast(b, 2))
+    f_gate = jax.jit(lambda b: ref.unary_topk_relocate(b, net))
+    emit("kernels/unary_topk_fastpath_512x64", time_fn(f_fast, bits),
+         "min(popcount,k) shortcut")
+    emit("kernels/unary_topk_gatelevel_512x64", time_fn(f_gate, bits),
+         f"{net.num_units}_CAS_units")
+
+    # rnl neuron bank
+    times = jax.random.randint(key, (64, 64), 0, 48)
+    w = jax.random.randint(key, (16, 64), 0, 8)
+    f_rnl = jax.jit(lambda t: ref.rnl_fire_times(t, w, t_steps=64,
+                                                 threshold=9, k=2))
+    emit("kernels/rnl_ref_64x16x64", time_fn(f_rnl, times), "closed_form")
+
+    # ssd scan: chunked vs token scan
+    ks = jax.random.split(key, 4)
+    bh, L, p, n = 8, 1024, 64, 64
+    u = jax.random.normal(ks[0], (bh, L, p), jnp.bfloat16)
+    ld = -jax.nn.softplus(jax.random.normal(ks[1], (bh, L)))
+    b = (jax.random.normal(ks[2], (bh, L, n)) * 0.3).astype(jnp.bfloat16)
+    c = (jax.random.normal(ks[3], (bh, L, n)) * 0.3).astype(jnp.bfloat16)
+    f_chunk = jax.jit(lambda *a: ref.ssd_scan_chunked(*a, 128))
+    f_tok = jax.jit(lambda *a: ref.ssd_scan(*a))
+    t_chunk = time_fn(f_chunk, u, ld, b, c, iters=5)
+    t_tok = time_fn(f_tok, u, ld, b, c, iters=5)
+    emit("kernels/ssd_chunked_8x1024", t_chunk, "chunk=128")
+    emit("kernels/ssd_tokenscan_8x1024", t_tok,
+         f"speedup={t_tok / max(t_chunk, 1e-9):.1f}x")
+
+    # moe gate
+    logits = jax.random.normal(key, (8192, 64))
+    f_gate2 = jax.jit(lambda x: ref.moe_gate_topk(x, 6))
+    emit("kernels/moe_gate_8192x64_top6", time_fn(f_gate2, logits), "ref")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Beyond-paper: accuracy under Catwalk clipping (the paper's §III open
+question — "Catwalk should not cause significant accuracy concerns. More
+experimental work is needed to validate this.").
+
+Sweeps k and input density on the TNN column clustering task: purity of
+Catwalk-dendrite columns vs the exact full-PC baseline, plus the measured
+per-tick clip rate. Demonstrates the sparsity condition quantitatively:
+accuracy holds until clip events dominate the integration window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import coding, column, neuron, stdp
+
+
+def _volleys(key, m, n, active, t_max=16):
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.bernoulli(k1, 0.5, (m,)).astype(jnp.int32)
+    t = jnp.full((m, n), 40)
+    jit = jax.random.randint(k2, (m, n), 0, 3)
+    t = t.at[:, :active].set(
+        jnp.where(labels[:, None] == 0, jit[:, :active], 40))
+    t = t.at[:, n // 2:n // 2 + active].set(
+        jnp.where(labels[:, None] == 1, jit[:, active:2 * active], 40))
+    return jnp.where(t >= t_max, coding.NO_SPIKE, t.astype(jnp.int32)), labels
+
+
+def run(n: int = 16, m: int = 400) -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+    scfg = stdp.STDPConfig(mu_capture=1.0, mu_backoff=1.0, mu_search=0.5)
+    for active in (2, 4, 8):
+        volleys, labels = _volleys(jax.random.PRNGKey(7 + active), m, n,
+                                   active)
+        # exact full-PC reference
+        thr_pc = max(4, int(active * 7 * 0.65))
+        cfg = column.ColumnConfig(n_inputs=n, n_neurons=2, threshold=thr_pc,
+                                  t_steps=16, dendrite="pc_compact",
+                                  stdp=scfg)
+        w, winners = column.train_column(
+            column.init_column(key, cfg), volleys, cfg)
+        p_ref = float(column.cluster_purity(winners[m // 2:],
+                                            labels[m // 2:], 2, 2))
+        emit(f"clip/pc_active{active}", round(p_ref, 3), "purity")
+        out[(active, "pc")] = p_ref
+        for k in (1, 2, 4):
+            thr = max(3, int(min(k, active) * (2 + 7) * 0.55))
+            cfgk = column.ColumnConfig(
+                n_inputs=n, n_neurons=2, threshold=thr, t_steps=16,
+                dendrite="catwalk", k=k, stdp=scfg)
+            wk, winnersk = column.train_column(
+                column.init_column(key, cfgk), volleys, cfgk)
+            p = float(column.cluster_purity(winnersk[m // 2:],
+                                            labels[m // 2:], 2, 2))
+            # clip-rate probe on the trained column
+            ncfg = neuron.NeuronConfig(n, thr, 16, "catwalk", k=k)
+            sim = neuron.simulate_neuron(volleys[:64], jnp.round(
+                wk[0]).astype(jnp.int32), ncfg)
+            clip = float(jnp.mean(sim.clip_events))
+            out[(active, k)] = (p, clip)
+            emit(f"clip/catwalk_k{k}_active{active}", round(p, 3),
+                 f"purity;clip_ticks_mean={clip:.2f}")
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Benchmark plumbing: timing + CSV emit."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (jit-compiled fns)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call, derived: str = "") -> None:
+    if isinstance(us_per_call, float):
+        us_per_call = f"{us_per_call:.2f}"
+    print(f"{name},{us_per_call},{derived}")

@@ -1,0 +1,155 @@
+"""Reproductions of every paper table/figure from the calibrated models.
+
+Each ``fig*/table*`` function prints CSV rows (name,value,derived) and
+returns a dict for tests. See EXPERIMENTS.md §Paper-validation for the
+rendered tables + error analysis.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import hwcost
+from repro.core import sorting_networks as sn
+from repro.core.topk_prune import topk_network
+
+
+def fig5_topk_pruning() -> dict:
+    """Fig. 5: pruning bitonic vs optimal 8-input sorters for top-2/top-4.
+    x/y/z = total / mandatory / half CAS units."""
+    out = {}
+    for kind in ("bitonic", "optimal"):
+        for k in (2, 4):
+            net = topk_network(kind, 8, k)
+            x, y, z = net.fig5_xyz()
+            out[f"{kind}_top{k}"] = (x, y, z)
+            emit(f"fig5/{kind}_n8_top{k}", float(net.gate_count),
+                 f"x/y/z={x}/{y}/{z}")
+    return out
+
+
+def fig6a_topk_gates() -> dict:
+    """Fig. 6a: gate count of unary top-k (optimal-derived) across n, k."""
+    out = {}
+    for n in (16, 32, 64):
+        for k in (2, 4, 8, n):
+            net = topk_network("auto", n, k if k < n else n)
+            eff = net.gate_count
+            removed = net.num_half
+            out[(n, k)] = eff
+            emit(f"fig6a/topk_n{n}_k{k}", float(eff),
+                 f"effective_gates={eff};half_removed={removed}")
+    return out
+
+
+def fig6b_dendrite_gates() -> dict:
+    """Fig. 6b: dendrite gate count (top-k + compact PC(k)) vs full PC(n).
+    FA booked at 4.5 gate-equivalents."""
+    FA_GE = 4.5
+    out = {}
+    for n in (16, 32, 64):
+        pc_only = (n - 1) * FA_GE
+        emit(f"fig6b/pc_n{n}", float(pc_only), "k=n (no top-k)")
+        out[(n, n)] = pc_only
+        for k in (2, 4, 8):
+            net = topk_network("auto", n, k)
+            d = net.gate_count + (k - 1) * FA_GE
+            out[(n, k)] = d
+            win = "gain" if d < pc_only else "loss"
+            emit(f"fig6b/dendrite_n{n}_k{k}", float(d), win)
+    return out
+
+
+def fig7_topk_cost(model=None) -> dict:
+    """Fig. 7: synthesized area/power of unary top-k across n, k."""
+    model = model or hwcost.calibrate()
+    out = {}
+    for n in (4, 8, 16, 32, 64):
+        for k in (2, n):
+            if k >= n:
+                kk = n
+            else:
+                kk = k
+            counts = hwcost.cas_stage_counts("auto", n, kk)
+            area = model.area_um2(counts) - model.area_fixed_um2
+            out[(n, kk)] = area
+            emit(f"fig7/topk_n{n}_k{kk}_area_um2", round(area, 2),
+                 "sorting" if kk == n else "topk")
+    return out
+
+
+def fig8_dendrite_cost(model=None) -> dict:
+    """Fig. 8: dendrite area/power, four designs, k=2."""
+    model = model or hwcost.calibrate()
+    out = {}
+    for n in (16, 32, 64):
+        for d in ("pc_conventional", "pc_compact", "sorting_pc", "catwalk"):
+            counts = hwcost.dendrite_counts(d, n, 2)
+            area = model.area_um2(counts) - model.area_fixed_um2
+            dyn = model.dynamic_uw(d, n, 2)
+            out[(n, d)] = (area, dyn)
+            emit(f"fig8/dendrite_{d}_n{n}", round(area, 2),
+                 f"dyn_uW={dyn:.1f}")
+    return out
+
+
+def fig9_neuron_cost(model=None) -> dict:
+    """Fig. 9: full-neuron synthesis (dendrite+soma+axon), k=2."""
+    model = model or hwcost.calibrate()
+    out = {}
+    for n in (16, 32, 64):
+        for d in ("pc_conventional", "pc_compact", "sorting_pc", "catwalk"):
+            r = model.neuron_report(d, n, 2)
+            out[(n, d)] = r
+            emit(f"fig9/neuron_{d}_n{n}", round(r["area_um2"], 2),
+                 f"total_uW={r['total_uw']:.1f}")
+    return out
+
+
+def table1_pnr(model=None) -> dict:
+    """Table I: P&R area/power, model vs paper, with error and the
+    headline Catwalk-vs-compact ratios."""
+    model = model or hwcost.calibrate()
+    out = {"rows": {}, "ratios": {}}
+    errs = []
+    for n, rows in hwcost.TABLE1.items():
+        for d, (leak, dyn, tot, area) in rows.items():
+            r = model.neuron_report(d, n, 2)
+            ea = r["area_um2"] / area - 1
+            et = r["total_uw"] / tot - 1
+            errs += [abs(ea), abs(et)]
+            out["rows"][(n, d)] = r
+            emit(f"table1/{d}_n{n}_area", round(r["area_um2"], 2),
+                 f"paper={area};err={ea:+.1%}")
+            emit(f"table1/{d}_n{n}_power", round(r["total_uw"], 2),
+                 f"paper={tot};err={et:+.1%}")
+    for n in (16, 32, 64):
+        rc = model.neuron_report("pc_compact", n, 2)
+        rk = model.neuron_report("catwalk", n, 2)
+        ar = rc["area_um2"] / rk["area_um2"]
+        pr = rc["total_uw"] / rk["total_uw"]
+        pa, pp = (hwcost.TABLE1[n]["pc_compact"][3]
+                  / hwcost.TABLE1[n]["catwalk"][3],
+                  hwcost.TABLE1[n]["pc_compact"][2]
+                  / hwcost.TABLE1[n]["catwalk"][2])
+        out["ratios"][n] = (ar, pr)
+        emit(f"table1/ratio_n{n}", f"{ar:.2f}x_area_{pr:.2f}x_power",
+             f"paper={pa:.2f}x/{pp:.2f}x")
+    mean_err = sum(errs) / len(errs)
+    out["mean_abs_err"] = mean_err
+    emit("table1/mean_abs_err", round(mean_err * 100, 2), "percent")
+    return out
+
+
+def main() -> None:
+    fig5_topk_pruning()
+    fig6a_topk_gates()
+    fig6b_dendrite_gates()
+    m = hwcost.calibrate()
+    fig7_topk_cost(m)
+    fig8_dendrite_cost(m)
+    fig9_neuron_cost(m)
+    table1_pnr(m)
+
+
+if __name__ == "__main__":
+    main()

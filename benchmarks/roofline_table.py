@@ -1,0 +1,73 @@
+"""Render the roofline table from the dry-run result files.
+
+Reads experiments/dryrun/{16x16,2x16x16}.json (written by
+``python -m repro.launch.dryrun --all [--multi-pod]``) and emits one CSV
+row per cell plus the markdown table used by EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str) -> dict:
+    p = RESULTS / f"{mesh}.json"
+    return json.loads(p.read_text()) if p.exists() else {}
+
+
+def markdown_table(mesh: str) -> str:
+    rows = load(mesh)
+    lines = [
+        f"### mesh {mesh}",
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " useful | roofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(rows):
+        r = rows[key]
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped ({r['reason'][:40]}…) | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — |")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            emit(f"roofline/{mesh}", "missing", "run dryrun --all first")
+            continue
+        ok = [r for r in rows.values() if r["status"] == "ok"]
+        sk = [r for r in rows.values() if r["status"] == "skipped"]
+        emit(f"roofline/{mesh}_cells_ok", float(len(ok)),
+             f"skipped={len(sk)}")
+        for key in sorted(rows):
+            r = rows[key]
+            if r["status"] != "ok":
+                continue
+            emit(f"roofline/{mesh}/{key}",
+                 round(r["roofline_fraction"], 4),
+                 f"dominant={r['dominant']};useful="
+                 f"{r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    print(markdown_table("16x16"))
+    print()
+    print(markdown_table("2x16x16"))

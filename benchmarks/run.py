@@ -1,0 +1,25 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call|value,derived`` CSV. Sections:
+  * fig5/fig6  — Algorithm-1 gate counts (exact structural reproduction)
+  * fig7/8/9   — synthesized area/power from the calibrated silicon model
+  * table1     — P&R reproduction + headline ratios + mean error
+  * clip       — beyond-paper accuracy-under-clipping study
+  * kernels    — kernel microbenches (CPU; TPU numbers come from §Roofline)
+  * roofline   — per-cell roofline fractions from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, clipping_study, paper_tables,
+                            roofline_table)
+    paper_tables.main()
+    clipping_study.main()
+    bench_kernels.main()
+    roofline_table.main()
+
+
+if __name__ == "__main__":
+    main()

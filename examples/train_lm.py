@@ -1,0 +1,106 @@
+"""End-to-end LM training driver: data pipeline -> sharded train step ->
+checkpoint/resume -> loss curve.
+
+Presets:
+  cpu-smoke (default): ~5M-param llama-style model, 200 steps on CPU —
+    finishes in a few minutes and demonstrably learns (loss curve printed).
+  100m: ~100M-param model for a few hundred steps — the paper-kind run for
+    real accelerators (identical code path; on this CPU container it is
+    compute-limited, so cpu-smoke is the default).
+
+Features exercised: synthetic pipeline determinism, grad accumulation,
+optional Catwalk top-k gradient compression, checkpoint every N steps +
+resume, straggler monitor hooks.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset cpu-smoke]
+      [--steps 200] [--compress] [--resume]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import pipeline as DP
+from repro.optim import grad_compression as GC
+from repro.optim.optimizers import AdamWConfig
+from repro.train import checkpoint as CK
+from repro.train import fault_tolerance as FT
+from repro.train import train_loop as TL
+
+PRESETS = {
+    "cpu-smoke": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                      d_ff=384, vocab_size=512, head_dim=32, seq=128,
+                      batch=8),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab_size=32000, head_dim=64, seq=1024,
+                 batch=32),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="cpu-smoke")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--compress", action="store_true",
+                    help="Catwalk top-k gradient compression (rho=0.05)")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(name=f"lm-{args.preset}", family="dense",
+                      n_layers=p["n_layers"], d_model=p["d_model"],
+                      n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+                      d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+                      head_dim=p["head_dim"], remat="none",
+                      dtype="float32")
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params")
+
+    tcfg = TL.TrainConfig(
+        optimizer=AdamWConfig(lr=3e-3, warmup_steps=20,
+                              total_steps=args.steps),
+        compression=GC.CompressionConfig(rho=0.05) if args.compress else None)
+    state = TL.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_fn = jax.jit(TL.make_train_step(cfg, tcfg))
+    data = DP.SyntheticLM(DP.DataConfig(seq_len=p["seq"],
+                                        global_batch=p["batch"],
+                                        vocab_size=cfg.vocab_size))
+
+    mgr = CK.CheckpointManager(args.ckpt_dir, keep=2, every=50,
+                               async_save=True)
+    start = 0
+    if args.resume:
+        state, start = mgr.restore_latest(state)
+        print(f"resumed from step {start}")
+
+    monitor = FT.HeartbeatMonitor(n_hosts=1)
+    losses = []
+    t0 = time.time()
+    for i in range(start, args.steps):
+        ts = time.time()
+        state, metrics = step_fn(state, data.batch(i))
+        monitor.beat(0, time.time() - ts)
+        losses.append(float(metrics["loss"]))
+        mgr.maybe_save(i + 1, state)
+        if (i + 1) % 25 == 0:
+            extra = (f" kept={float(metrics['kept_fraction']):.3f}"
+                     if "kept_fraction" in metrics else "")
+            print(f"step {i + 1:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}"
+                  f"  gnorm {float(metrics['grad_norm']):.2f}{extra}")
+    mgr.wait()
+    dt = time.time() - t0
+    print(f"\n{len(losses)} steps in {dt:.1f}s "
+          f"({dt / max(len(losses), 1):.2f}s/step)")
+    print(f"loss: first10 {np.mean(losses[:10]):.3f} -> "
+          f"last10 {np.mean(losses[-10:]):.3f}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn!"
+    print("OK: loss descended; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

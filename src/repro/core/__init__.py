@@ -1,0 +1,16 @@
+"""Core library: the paper's contribution (Catwalk unary top-k for SRM0-RNL
+neurons) as composable JAX modules, plus gate-level oracles and the silicon
+cost model used to reproduce the paper's hardware evaluation."""
+
+from repro.core import coding, column, hwcost, neuron, sorting_networks, stdp
+from repro.core import topk_prune, unary_ops
+from repro.core.neuron import NeuronConfig, simulate_neuron
+from repro.core.column import ColumnConfig, column_forward, train_column
+from repro.core.topk_prune import TopKNetwork, prune_topk, topk_network
+
+__all__ = [
+    "coding", "column", "hwcost", "neuron", "sorting_networks", "stdp",
+    "topk_prune", "unary_ops", "NeuronConfig", "simulate_neuron",
+    "ColumnConfig", "column_forward", "train_column", "TopKNetwork",
+    "prune_topk", "topk_network",
+]

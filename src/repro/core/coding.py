@@ -1,0 +1,100 @@
+"""Temporal / unary coding utilities (paper §II, Fig. 3).
+
+TNNs encode a value in the *timing* of a single spike within a gamma cycle
+of ``T`` clock ticks. Earlier spike = stronger input ("larger" in the unary
+CAS ordering). ``NO_SPIKE`` (= value infinity) means the line stays silent.
+
+Two tensor representations are used throughout:
+
+  * **spike times**: integer arrays, entries in ``[0, T)`` or ``NO_SPIKE``.
+  * **bit waves**: boolean arrays with a trailing time axis expanded, shape
+    ``(..., T, n)``; ``wave[..., t, i] = 1`` iff line ``i`` is asserted at
+    tick ``t``. Monotone (leading-0 rising-edge) waves stay 1 once asserted;
+    RNL response waves are width-``w`` pulses (not monotone).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Sentinel spike time for "no spike" (value = infinity). Any time >= T
+#: behaves identically; we pick a large int32 that survives +w arithmetic.
+NO_SPIKE = jnp.int32(2**30)
+
+
+def is_spike(times: jax.Array) -> jax.Array:
+    """Boolean mask of lines that carry a spike."""
+    return times < NO_SPIKE
+
+
+def value_to_time(values: jax.Array, t_max: int) -> jax.Array:
+    """Encode intensities in [0, 1] as spike times: strongest -> t=0,
+    zero intensity -> no spike. This is the standard TNN input encoding
+    (larger value == earlier spike)."""
+    values = jnp.clip(values, 0.0, 1.0)
+    t = jnp.round((1.0 - values) * (t_max - 1)).astype(jnp.int32)
+    return jnp.where(values <= 0.0, NO_SPIKE, t)
+
+
+def time_to_value(times: jax.Array, t_max: int) -> jax.Array:
+    """Inverse of :func:`value_to_time` (no-spike -> 0)."""
+    v = 1.0 - times.astype(jnp.float32) / (t_max - 1)
+    return jnp.where(is_spike(times), v, 0.0)
+
+
+def times_to_monotone_wave(times: jax.Array, t_steps: int) -> jax.Array:
+    """Leading-0 rising-edge unary wave: ``wave[..., t, i] = (t >= times[i])``.
+
+    This is the signal form consumed by unary CAS networks (Fig. 3): the
+    rising-edge timing carries the value; OR = earlier edge = larger value.
+    Output shape: times.shape[:-1] + (t_steps, n); dtype bool.
+    """
+    t = jnp.arange(t_steps, dtype=jnp.int32)
+    return t[:, None] >= times[..., None, :]
+
+
+def rnl_response(w: jax.Array, t: jax.Array) -> jax.Array:
+    """Equation (1): the ramp-no-leak response value at relative time t.
+
+    rho(w, t) = 0        if t < 0
+              = t + 1    if 0 <= t < w
+              = w        if t >= w
+    """
+    return jnp.where(t < 0, 0, jnp.minimum(t + 1, w)).astype(jnp.int32)
+
+
+def rnl_response_bits(times: jax.Array, weights: jax.Array,
+                      t_steps: int) -> jax.Array:
+    """Per-cycle dendrite bits: line ``i`` is hot at tick ``t`` iff its RNL
+    ramp is still climbing, i.e. ``times[i] <= t < times[i] + weights[i]``.
+
+    Accumulating these bits over ticks reproduces Equation (1) exactly:
+    ``sum_{t'<=t} bit[t'] == rho(w, t - times[i])``. This is what the PC
+    (and Catwalk's top-k + small PC) consumes each clock cycle.
+
+    Args:
+      times:   (..., n) int32 spike times (NO_SPIKE for silent lines).
+      weights: (..., n) or (n,) int32 synaptic weights >= 0.
+      t_steps: gamma-cycle length in ticks.
+
+    Returns:
+      (..., t_steps, n) bool.
+    """
+    t = jnp.arange(t_steps, dtype=jnp.int32)[:, None]
+    start = times[..., None, :]
+    end = times[..., None, :] + jnp.broadcast_to(weights, times.shape)[..., None, :]
+    return (t >= start) & (t < end)
+
+
+def popcount_thermometer(bits: jax.Array) -> jax.Array:
+    """The sorted form of a Boolean vector: bottom ``popcount`` wires hot.
+
+    ``thermo[..., m] = 1`` iff ``m >= n - popcount(bits)``. A correct unary
+    sorting network applied bitwise must produce exactly this (0-1
+    principle) — used as the oracle for gate-level evaluation.
+    """
+    n = bits.shape[-1]
+    pc = jnp.sum(bits.astype(jnp.int32), axis=-1, keepdims=True)
+    idx = jnp.arange(n)
+    return idx >= (n - pc)

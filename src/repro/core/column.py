@@ -1,0 +1,122 @@
+"""TNN column: n inputs -> q parallel SRM0-RNL neurons -> 1-WTA inhibition.
+
+This is the unit of computation in Smith-style TNNs ([12, 13]; Nair et al.
+[7] build the same structure in RTL). A column receives one spike volley per
+gamma cycle, every neuron integrates it through its own synaptic weights,
+and winner-take-all lateral inhibition lets only the earliest-firing neuron
+emit a spike (ties broken by lowest neuron index — matching the priority
+encoder in hardware). With STDP this performs online unsupervised
+clustering: each neuron's weight vector converges to a cluster centroid of
+the input volleys.
+
+The column is dendrite-agnostic: any :class:`repro.core.neuron.NeuronConfig`
+variant (full PC or Catwalk) plugs in, which is how the accuracy-vs-k
+clipping study (EXPERIMENTS §Beyond-paper) is run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, neuron, stdp
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnConfig:
+    n_inputs: int
+    n_neurons: int
+    threshold: int
+    t_steps: int
+    dendrite: neuron.DendriteKind = "catwalk"
+    k: int = 2
+    w_max: int = 7
+    stdp: stdp.STDPConfig = dataclasses.field(default_factory=stdp.STDPConfig)
+
+    def neuron_config(self) -> neuron.NeuronConfig:
+        return neuron.NeuronConfig(
+            n_inputs=self.n_inputs, threshold=self.threshold,
+            t_steps=self.t_steps, dendrite=self.dendrite, k=self.k)
+
+
+def init_column(key: jax.Array, cfg: ColumnConfig) -> jax.Array:
+    """Random initial weights (q, n) uniform over [0, w_max]."""
+    return jax.random.uniform(key, (cfg.n_neurons, cfg.n_inputs),
+                              minval=0.0, maxval=float(cfg.w_max))
+
+
+def column_forward(weights: jax.Array, in_times: jax.Array,
+                   cfg: ColumnConfig) -> Tuple[jax.Array, jax.Array]:
+    """Run one gamma cycle.
+
+    Args:
+      weights: (q, n) float; rounded to ints (hardware registers).
+      in_times: (n,) int32 spike volley.
+
+    Returns:
+      (out_times, winner): out_times (q,) int32 post-WTA spike times
+      (NO_SPIKE for losers); winner () int32 index, -1 if no neuron fired.
+    """
+    w_int = jnp.round(weights).astype(jnp.int32)
+    if cfg.dendrite in ("sorting_pc", "catwalk"):
+        fire = jax.vmap(
+            lambda wr: neuron.fire_time_catwalk_closed_form(
+                in_times, wr, cfg.threshold, cfg.t_steps, cfg.k))(w_int)
+    else:
+        fire = jax.vmap(
+            lambda wr: neuron.fire_time_closed_form(
+                in_times, wr, cfg.threshold, cfg.t_steps))(w_int)
+    # 1-WTA: earliest fire wins; ties -> lowest index (hardware priority
+    # encoder). argmin on (time, index) lexicographic via scaled key.
+    any_fire = jnp.any(coding.is_spike(fire))
+    winner = jnp.argmin(fire).astype(jnp.int32)  # NO_SPIKE is the max value
+    winner = jnp.where(any_fire, winner, -1)
+    out = jnp.where(jnp.arange(fire.shape[0]) == winner, fire,
+                    coding.NO_SPIKE)
+    return out, winner
+
+
+def column_step(weights: jax.Array, in_times: jax.Array, cfg: ColumnConfig,
+                key: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Forward + STDP. Returns (new_weights, out_times, winner)."""
+    out_times, winner = column_forward(weights, in_times, cfg)
+    new_w = stdp.stdp_update_column(weights, in_times, out_times, winner,
+                                    cfg.stdp, key)
+    return new_w, out_times, winner
+
+
+def train_column(weights: jax.Array, volleys: jax.Array, cfg: ColumnConfig,
+                 key: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Online training over a stream of volleys (m, n) via lax.scan.
+
+    Returns (final_weights, winners (m,)).
+    """
+    m = volleys.shape[0]
+    keys = (jnp.zeros((m, 2), jnp.uint32) if key is None
+            else jax.random.split(key, m))
+    use_key = key is not None
+
+    def step(w, xs):
+        volley, k = xs
+        new_w, _, winner = column_step(w, volley, cfg,
+                                       k if use_key else None)
+        return new_w, winner
+
+    final_w, winners = jax.lax.scan(step, weights, (volleys, keys))
+    return final_w, winners
+
+
+def cluster_purity(winners: jax.Array, labels: jax.Array,
+                   n_neurons: int, n_classes: int) -> jax.Array:
+    """Unsupervised clustering purity: assign each neuron its majority
+    label, score the fraction of volleys routed to a matching neuron."""
+    conf = jnp.zeros((n_neurons + 1, n_classes), jnp.int32)  # row q = no-win
+    idx = jnp.where(winners >= 0, winners, n_neurons)
+    conf = conf.at[idx, labels].add(1)
+    per_neuron_best = jnp.max(conf[:n_neurons], axis=1)
+    return jnp.sum(per_neuron_best) / jnp.maximum(1, winners.shape[0])

@@ -1,0 +1,174 @@
+"""SRM0-RNL neuron models (paper Fig. 2 / Fig. 4), cycle-accurate in JAX.
+
+Four dendrite variants, matching the paper's evaluated designs:
+
+  * ``pc_conventional`` — adder-tree parallel counter over all n lines.
+  * ``pc_compact``      — Nair et al. [7] compact PC (n-1 full adders).
+    (Functionally identical to conventional; they differ only in hardware
+    cost — see hwcost.py. Both are the "existing SRM0-RNL neuron".)
+  * ``sorting_pc``      — full unary (bitonic) sorter + k-input PC.
+  * ``catwalk``         — pruned unary top-k (optimal sorter) + k-input PC.
+    This is the paper's contribution.
+
+Semantics per gamma cycle of ``t_steps`` ticks:
+  1. Each input line i spikes at ``times[i]`` (or never). Its synapse
+     launches an RNL ramp: the line contributes one bit per tick while
+     ``times[i] <= t < times[i] + w[i]`` (coding.rnl_response_bits).
+  2. The dendrite reduces the n bits to a per-tick increment:
+       full PC:          popcount(bits)           (exact)
+       sorting/catwalk:  min(popcount(bits), k)   (clipped at k)
+  3. The soma accumulates increments into the membrane potential; when the
+     potential first reaches ``threshold`` the axon emits an output spike at
+     that tick (and an 8-tick pulse in hardware); the neuron then holds
+     (reset happens between gamma cycles).
+
+Catwalk is bit-exact vs the full PC whenever every tick has popcount <= k —
+the sparsity condition the paper leverages. ``simulate_neuron`` exposes a
+``clip_events`` diagnostic counting violated ticks.
+
+Everything is vmap/jit friendly; the scan version is the cycle-accurate
+hardware mirror, and closed-form fast paths are provided for training-scale
+use. The Pallas kernel (kernels/rnl_neuron.py) fuses steps 1-3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, unary_ops
+from repro.core.topk_prune import topk_network
+
+DendriteKind = Literal["pc_conventional", "pc_compact", "sorting_pc", "catwalk"]
+
+#: Axon output pulse length in ticks (Fig. 4a: 8-cycle pulse counter).
+AXON_PULSE_TICKS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronConfig:
+    n_inputs: int
+    threshold: int
+    t_steps: int
+    dendrite: DendriteKind = "catwalk"
+    k: int = 2
+    #: sorter family used to derive the top-k network ('optimal' per paper;
+    #: sorting_pc uses 'bitonic' to mirror the paper's evaluation setup).
+    sorter: str = "optimal"
+    #: If True, run the gate-level CAS network; else the algebraic fast path.
+    gate_level: bool = False
+
+
+@dataclasses.dataclass
+class NeuronOutput:
+    """fire_time: (batch,) int32 tick of output spike (NO_SPIKE if silent).
+    potential: (batch, t_steps) int32 membrane potential trace.
+    clip_events: (batch,) int32 ticks where popcount > k (catwalk/sorting).
+    axon_wave: (batch, t_steps) bool axon output pulse (8 ticks)."""
+
+    fire_time: jax.Array
+    potential: jax.Array
+    clip_events: jax.Array
+    axon_wave: jax.Array
+
+
+def _dendrite_increment(bits: jax.Array, cfg: NeuronConfig) -> jax.Array:
+    """Per-tick increment from the dendrite bits (..., n) -> (...,)."""
+    if cfg.dendrite in ("pc_conventional", "pc_compact"):
+        return jnp.sum(bits.astype(jnp.int32), axis=-1)
+    if cfg.dendrite == "sorting_pc":
+        if cfg.gate_level:
+            from repro.core import sorting_networks as sn
+            srt = sn.get_network("bitonic" if cfg.sorter == "optimal" else cfg.sorter,
+                                 cfg.n_inputs)
+            full = unary_ops.sort_bits(bits, srt)
+            return jnp.sum(full[..., cfg.n_inputs - cfg.k:].astype(jnp.int32), axis=-1)
+        return jnp.minimum(jnp.sum(bits.astype(jnp.int32), axis=-1), cfg.k)
+    if cfg.dendrite == "catwalk":
+        if cfg.gate_level:
+            net = topk_network(cfg.sorter, cfg.n_inputs, cfg.k)
+            return unary_ops.topk_count(bits, net)
+        return jnp.minimum(jnp.sum(bits.astype(jnp.int32), axis=-1), cfg.k)
+    raise ValueError(f"unknown dendrite {cfg.dendrite}")
+
+
+def simulate_neuron(times: jax.Array, weights: jax.Array,
+                    cfg: NeuronConfig) -> NeuronOutput:
+    """Cycle-accurate simulation via lax.scan over ticks.
+
+    Args:
+      times:   (..., n) int32 spike times.
+      weights: (..., n) or (n,) int32 synaptic weights.
+    """
+    t_steps = cfg.t_steps
+    w = jnp.broadcast_to(weights, times.shape).astype(jnp.int32)
+
+    def tick(carry, t):
+        pot, fired_at = carry
+        bit = (t >= times) & (t < times + w)          # (..., n) RNL ramp bits
+        inc = _dendrite_increment(bit, cfg)
+        over = jnp.sum(bit.astype(jnp.int32), axis=-1) > cfg.k \
+            if cfg.dendrite in ("sorting_pc", "catwalk") else \
+            jnp.zeros(bit.shape[:-1], jnp.bool_)
+        pot = pot + inc
+        newly = (pot >= cfg.threshold) & (fired_at == coding.NO_SPIKE)
+        fired_at = jnp.where(newly, t, fired_at)
+        return (pot, fired_at), (pot, over)
+
+    batch_shape = times.shape[:-1]
+    init = (jnp.zeros(batch_shape, jnp.int32),
+            jnp.full(batch_shape, coding.NO_SPIKE, jnp.int32))
+    (pot_final, fire), (pot_trace, over_trace) = jax.lax.scan(
+        tick, init, jnp.arange(t_steps, dtype=jnp.int32))
+    del pot_final
+    # scan stacks on axis 0 -> move time to the last batch axis position
+    pot_trace = jnp.moveaxis(pot_trace, 0, -1)
+    over_trace = jnp.moveaxis(over_trace, 0, -1)
+    clip_events = jnp.sum(over_trace.astype(jnp.int32), axis=-1)
+    t = jnp.arange(t_steps, dtype=jnp.int32)
+    axon = (t >= fire[..., None]) & (t < fire[..., None] + AXON_PULSE_TICKS)
+    return NeuronOutput(fire_time=fire, potential=pot_trace,
+                        clip_events=clip_events, axon_wave=axon)
+
+
+def fire_time_closed_form(times: jax.Array, weights: jax.Array,
+                          threshold: int, t_steps: int) -> jax.Array:
+    """Vectorized exact fire time for the full-PC neuron (no scan).
+
+    potential(t) = sum_i rho(w_i, t - times_i) is nondecreasing in t, so the
+    fire tick is the first t with potential >= threshold; we evaluate all
+    t in parallel. O(T*n) flops but fully parallel — the building block for
+    training-scale TNN columns.
+    """
+    w = jnp.broadcast_to(weights, times.shape).astype(jnp.int32)
+    t = jnp.arange(t_steps, dtype=jnp.int32)
+    rel = t[..., :, None] - times[..., None, :]          # (..., T, n)
+    pot = jnp.sum(coding.rnl_response(w[..., None, :], rel), axis=-1)
+    hit = pot >= threshold
+    any_hit = jnp.any(hit, axis=-1)
+    first = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    return jnp.where(any_hit, first, coding.NO_SPIKE)
+
+
+def fire_time_catwalk_closed_form(times: jax.Array, weights: jax.Array,
+                                  threshold: int, t_steps: int,
+                                  k: int) -> jax.Array:
+    """Exact fire time for the Catwalk neuron (per-tick clip at k), no scan.
+
+    increment(t) = min(popcount(bits(t)), k); potential = cumsum. Still
+    parallel over t via cumsum along the time axis.
+    """
+    w = jnp.broadcast_to(weights, times.shape).astype(jnp.int32)
+    t = jnp.arange(t_steps, dtype=jnp.int32)
+    rel = t[..., :, None] - times[..., None, :]
+    bits = (rel >= 0) & (rel < w[..., None, :])
+    inc = jnp.minimum(jnp.sum(bits.astype(jnp.int32), axis=-1), k)
+    pot = jnp.cumsum(inc, axis=-1)
+    hit = pot >= threshold
+    any_hit = jnp.any(hit, axis=-1)
+    first = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    return jnp.where(any_hit, first, coding.NO_SPIKE)

@@ -1,0 +1,112 @@
+"""Spike-timing-dependent plasticity for TNN columns (Smith [12, 13]).
+
+The TNN STDP rule is a local, unsupervised update applied per synapse after
+each gamma cycle, based only on whether/when the input line (x) and the
+neuron's output (y, post-WTA) spiked:
+
+  case                         update
+  ---------------------------  -----------------------------
+  x spike, y spike, t_x <= t_y  capture:  w += mu_capture * B
+  x spike, y spike, t_x >  t_y  backoff:  w -= mu_backoff * B
+  x spike, no y spike           search:   w += mu_search
+  no x spike, y spike           backoff:  w -= mu_backoff * B
+  no x, no y                    no change
+
+with B a stabilizing Bernoulli variable that slows drift near the weight
+rails: P(B=1) is small when w is near 0 or w_max (Smith uses
+B ~ Bernoulli((w/w_max)(1-w/w_max)*4 ...); we implement both the stochastic
+rule and its deterministic expectation, selected by passing a PRNG key or
+``None``). Weights are integers in [0, w_max] in hardware; we keep float
+weights internally and round on readout to mirror the hardware registers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding
+
+
+@dataclasses.dataclass(frozen=True)
+class STDPConfig:
+    w_max: int = 7
+    mu_capture: float = 1.0
+    mu_backoff: float = 0.5
+    mu_search: float = 0.25
+    #: stabilization: scale updates by 4*(w/wmax)*(1-w/wmax) + floor
+    stabilize: bool = True
+    stab_floor: float = 0.25
+
+
+def _stabilizer(w: jax.Array, cfg: STDPConfig) -> jax.Array:
+    if not cfg.stabilize:
+        return jnp.ones_like(w)
+    u = w / cfg.w_max
+    return jnp.maximum(4.0 * u * (1.0 - u), cfg.stab_floor)
+
+
+def stdp_update(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
+                cfg: STDPConfig, key: Optional[jax.Array] = None) -> jax.Array:
+    """One STDP step for one neuron.
+
+    Args:
+      weights:  (n,) float32 in [0, w_max].
+      in_times: (n,) int32 input spike times (NO_SPIKE if silent).
+      out_time: () int32 output spike time after WTA (NO_SPIKE if the neuron
+        did not win / did not fire — then only 'search' applies).
+      key: optional PRNG key for the stochastic rule; None = expectation.
+
+    Returns updated weights, clipped to [0, w_max].
+    """
+    x = coding.is_spike(in_times)
+    y = coding.is_spike(out_time)
+    causal = x & y & (in_times <= out_time)
+    anti = x & y & (in_times > out_time)
+    search = x & ~y
+    ghost = ~x & y
+
+    b = _stabilizer(weights, cfg)
+    if key is not None:
+        kb, = jax.random.split(key, 1)
+        bern = jax.random.uniform(kb, weights.shape) < b
+        b = bern.astype(weights.dtype)
+
+    delta = (causal * cfg.mu_capture * b
+             - anti * cfg.mu_backoff * b
+             + search * cfg.mu_search
+             - ghost * cfg.mu_backoff * b)
+    return jnp.clip(weights + delta, 0.0, float(cfg.w_max))
+
+
+def stdp_update_column(weights: jax.Array, in_times: jax.Array,
+                       out_times: jax.Array, winner: jax.Array,
+                       cfg: STDPConfig,
+                       key: Optional[jax.Array] = None) -> jax.Array:
+    """Column-level STDP with lateral inhibition of learning.
+
+    Only the WTA winner learns from its (capture/backoff) table — the
+    inhibited losers neither fired nor learn, mirroring the post-WTA STDP
+    datapath of the RTL implementations [7]. When NO neuron fired
+    (winner == -1), every neuron applies the 'search' rule on spiking
+    inputs so the column can acquire unseen patterns.
+
+    Args: weights (q, n); in_times (n,); out_times (q,); winner ().
+    """
+    q = weights.shape[0]
+    keys = (jax.random.split(key, q) if key is not None else None)
+
+    def one(idx, w, o, k):
+        updated = stdp_update(w, in_times, o, cfg, k)
+        is_winner = idx == winner
+        column_silent = winner < 0
+        return jnp.where(is_winner | column_silent, updated, w)
+
+    idxs = jnp.arange(q)
+    if keys is None:
+        return jax.vmap(lambda i, w, o: one(i, w, o, None))(
+            idxs, weights, out_times)
+    return jax.vmap(one)(idxs, weights, out_times, keys)

@@ -1,0 +1,105 @@
+"""Vectorized gate-level evaluation of unary CAS networks in JAX.
+
+The circuit processes one bit per wire per clock tick; on TPU we evaluate
+whole bit-planes at once: an input tensor ``(..., n)`` holds the per-tick
+dendrite bits of all batch elements, and each CAS unit becomes two
+elementwise gates on lanes ``i``/``j``:
+
+    bottom (j) <- OR  (max: hot if either input hot / earlier rising edge)
+    top    (i) <- AND (min)
+
+Evaluating a *sorting* network this way yields the popcount thermometer
+(0-1 principle); a pruned top-k network preserves the bottom-k wires of it,
+so ``sum(bottom_k) == min(popcount, k)`` — the formal Catwalk correctness
+condition. Fast paths that skip gate evaluation live alongside and are
+tested bit-equal.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk_prune import TopKNetwork
+
+
+def apply_cas_bits(bits: jax.Array,
+                   network: Sequence[Tuple[int, int]]) -> jax.Array:
+    """Apply a CAS network bitwise: AND to wire i, OR to wire j.
+
+    ``bits``: (..., n) bool/int. Returns same shape/dtype bool. The loop is
+    unrolled at trace time (networks are static, <= ~700 units), producing a
+    flat chain of elementwise ops that XLA fuses; lane-index updates are
+    gathered into per-stage permutations by the Pallas kernel instead
+    (see kernels/unary_topk.py) — this version is the readable reference.
+    """
+    b = bits.astype(bool)
+    cols = [b[..., w] for w in range(b.shape[-1])]
+    for i, j in network:
+        lo = cols[i] & cols[j]
+        hi = cols[i] | cols[j]
+        cols[i], cols[j] = lo, hi
+    return jnp.stack(cols, axis=-1)
+
+
+def apply_cas_waves(waves: jax.Array,
+                    network: Sequence[Tuple[int, int]]) -> jax.Array:
+    """Same network on monotone temporal waves (..., T, n): per-tick gates.
+
+    Because AND/OR act independently per tick, this is just
+    :func:`apply_cas_bits` with the time axis folded into the batch.
+    """
+    return apply_cas_bits(waves, network)
+
+
+def sort_bits(bits: jax.Array, network: Sequence[Tuple[int, int]]) -> jax.Array:
+    """Gate-level unary sort of a bit-plane. Output = popcount thermometer."""
+    return apply_cas_bits(bits, network)
+
+
+def topk_bits(bits: jax.Array, net: TopKNetwork) -> jax.Array:
+    """Gate-level unary top-k (Fig. 4b dendrite): returns the bottom-k wires.
+
+    Output shape (..., k); ``sum(out) == min(popcount(bits), k)``.
+    """
+    full = apply_cas_bits(bits, net.units)
+    return full[..., net.n - net.k:]
+
+
+def topk_bits_fast(bits: jax.Array, k: int) -> jax.Array:
+    """Algebraic shortcut for :func:`topk_bits` — the TPU-native fast path.
+
+    min(popcount, k) expanded back to a k-wire thermometer. Bit-exact equal
+    to the gate network (tested); O(n) instead of O(|units|).
+    """
+    pc = jnp.sum(bits.astype(jnp.int32), axis=-1, keepdims=True)
+    idx = jnp.arange(k)
+    return idx >= (k - jnp.minimum(pc, k))
+
+
+def topk_count(bits: jax.Array, net: TopKNetwork) -> jax.Array:
+    """Small-PC output: number of hot wires among the selected k
+    (= min(popcount, k) when the network is a valid top-k selector)."""
+    return jnp.sum(topk_bits(bits, net).astype(jnp.int32), axis=-1)
+
+
+def half_unit_masked(bits: jax.Array, net: TopKNetwork) -> jax.Array:
+    """Gate-level evaluation honoring half units: dropped outputs are
+    replaced by an X (here: 0) and must not influence the selected wires.
+
+    Used by tests to prove the half-CAS optimization is safe: the bottom-k
+    wires are bit-identical with and without the dropped gates.
+    """
+    b = bits.astype(bool)
+    cols = [b[..., w] for w in range(b.shape[-1])]
+    drop_by_unit = dict(net.dropped_output)  # unit_idx -> dropped wire
+    for p, (i, j) in enumerate(net.units):
+        lo = cols[i] & cols[j]
+        hi = cols[i] | cols[j]
+        dw = drop_by_unit.get(p)
+        cols[i] = jnp.zeros_like(lo) if dw == i else lo
+        cols[j] = jnp.zeros_like(hi) if dw == j else hi
+    full = jnp.stack(cols, axis=-1)
+    return full[..., net.n - net.k:]

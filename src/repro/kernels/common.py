@@ -1,0 +1,33 @@
+"""Shared kernel plumbing: interpret-mode selection and tiling helpers.
+
+TPU v5e is the TARGET; this container is CPU-only, so kernels default to
+``interpret=True`` (the Pallas interpreter executes the kernel body in
+Python for bit-accurate validation). On a real TPU backend the same
+``pl.pallas_call`` lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+LANE = 128          # TPU vector lane width (last dim tiling quantum)
+SUBLANE = 8         # float32 sublane quantum (second-to-last dim)
+
+
+@functools.lru_cache(maxsize=None)
+def use_interpret() -> bool:
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

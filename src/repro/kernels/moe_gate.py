@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused MoE router (softmax gate + top-k selection).
+
+This is the Catwalk idea at tensor granularity (DESIGN.md §3.3): the
+router *relocates* each token's sparse expert activations into a dense
+top-k cluster so downstream dispatch pays O(k), not O(E). Fusing
+softmax + iterative top-k extraction in one VMEM pass avoids writing the
+(T, E) probability matrix back to HBM — for deepseek-v2-lite (E=64,
+top-6) that is a 10x traffic cut on the router path.
+
+Grid: one block of T_TILE tokens per step; iterative max-extract (k small)
+inside the kernel keeps everything vectorized on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+T_TILE = 256
+NEG = -1e30
+
+
+def _gate_kernel(logits_ref, vals_ref, idx_ref, *, k, renorm):
+    x = logits_ref[...].astype(jnp.float32)            # (T, E)
+    e = x.shape[-1]
+    # numerically-stable softmax denominator over ALL experts
+    m = jnp.max(x, axis=-1, keepdims=True)
+    z = jnp.exp(x - m)
+    denom = jnp.sum(z, axis=-1, keepdims=True)
+
+    work = x
+    vals = []
+    idxs = []
+    for _ in range(k):
+        top = jnp.max(work, axis=-1)
+        arg = jnp.argmax(work, axis=-1).astype(jnp.int32)
+        vals.append(top)
+        idxs.append(arg)
+        work = jnp.where(jnp.arange(e)[None, :] == arg[:, None], NEG, work)
+    tv = jnp.stack(vals, axis=-1)                      # (T, k) raw logits
+    probs = jnp.exp(tv - m) / denom                    # softmax probs of picks
+    if renorm:
+        probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    vals_ref[...] = probs
+    idx_ref[...] = jnp.stack(idxs, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "renorm"))
+def moe_gate_topk(logits: jax.Array, k: int, renorm: bool = True):
+    """Fused router.
+
+    Args:
+      logits: (T, E) router scores.
+      k: experts per token.
+      renorm: renormalize the selected probabilities to sum to 1
+        (deepseek-style) instead of keeping full-softmax mass.
+
+    Returns:
+      (probs (T, k) f32, indices (T, k) int32) — indices are in
+      descending-probability order (ties -> lowest expert id first).
+    """
+    t, e = logits.shape
+    t_pad = common.round_up(t, T_TILE)
+    x = jnp.pad(logits, ((0, t_pad - t), (0, 0)))
+    probs, idx = pl.pallas_call(
+        functools.partial(_gate_kernel, k=k, renorm=renorm),
+        out_shape=(jax.ShapeDtypeStruct((t_pad, k), jnp.float32),
+                   jax.ShapeDtypeStruct((t_pad, k), jnp.int32)),
+        grid=(t_pad // T_TILE,),
+        in_specs=[pl.BlockSpec((T_TILE, e), lambda r: (r, 0))],
+        out_specs=(pl.BlockSpec((T_TILE, k), lambda r: (r, 0)),
+                   pl.BlockSpec((T_TILE, k), lambda r: (r, 0))),
+        interpret=common.use_interpret(),
+    )(x)
+    return probs[:t], idx[:t]

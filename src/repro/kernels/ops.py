@@ -1,0 +1,83 @@
+"""Public jit'd kernel API: dispatches Pallas kernels with ref fallback.
+
+``impl='pallas'`` (default) runs the Pallas kernels (interpret-mode on CPU,
+Mosaic on TPU); ``impl='ref'`` runs the pure-jnp oracles — useful for A/B
+validation and for code paths where the oracle lowers better (e.g. inside
+the fully-sharded dry-run, where interpret-mode pallas_call cannot be
+SPMD-partitioned across a mesh).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Literal
+
+import jax
+
+from repro.kernels import moe_gate as _moe
+from repro.kernels import ref as _ref
+from repro.kernels import rnl_neuron as _rnl
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import unary_topk as _utk
+
+Impl = Literal["pallas", "ref"]
+
+
+def default_impl() -> Impl:
+    return os.environ.get("REPRO_KERNEL_IMPL", "pallas")  # type: ignore
+
+
+def unary_topk_relocate(bits, net, impl: Impl | None = None):
+    impl = impl or default_impl()
+    fn = _utk.unary_topk_relocate if impl == "pallas" else _ref.unary_topk_relocate
+    return fn(bits, net)
+
+
+def unary_topk_count(bits, net, impl: Impl | None = None):
+    impl = impl or default_impl()
+    fn = _utk.unary_topk_count if impl == "pallas" else _ref.unary_topk_count
+    return fn(bits, net)
+
+
+def rnl_fire_times(times, weights, *, t_steps, threshold, k=None,
+                   impl: Impl | None = None):
+    impl = impl or default_impl()
+    fn = _rnl.rnl_fire_times if impl == "pallas" else _ref.rnl_fire_times
+    return fn(times, weights, t_steps=t_steps, threshold=threshold, k=k)
+
+
+def ssd_scan(u, log_decay, b, c, chunk: int = _ssd.CHUNK,
+             impl: Impl | None = None):
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return _ssd.ssd_scan(u, log_decay, b, c, chunk)
+    # 'ref' production path = differentiable chunked jnp (partitionable
+    # under pjit; the token-scan oracle lives in ref.ssd_scan for tests)
+    return _ref.ssd_scan_chunked(u, log_decay, b, c, chunk)
+
+
+def ssd_scan_mh(u, log_decay, b, c, chunk: int = _ssd.CHUNK,
+                impl: Impl | None = None):
+    """Multi-head SSD with shared B/C (u (B,H,L,P); b,c (B,L,N)).
+
+    Pallas path folds heads into the kernel grid (repeating B/C — fine at
+    test scale); ref path keeps the head axis inside einsums (§Perf H2).
+    """
+    impl = impl or default_impl()
+    if impl == "pallas":
+        import jax.numpy as jnp
+        bsz, h, L, p = u.shape
+        n = b.shape[-1]
+        u_k = u.reshape(bsz * h, L, p)
+        ld_k = log_decay.reshape(bsz * h, L)
+        b_k = jnp.repeat(b[:, None], h, axis=1).reshape(bsz * h, L, n)
+        c_k = jnp.repeat(c[:, None], h, axis=1).reshape(bsz * h, L, n)
+        y = _ssd.ssd_scan(u_k, ld_k, b_k, c_k, chunk)
+        return y.reshape(bsz, h, L, p)
+    return _ref.ssd_scan_chunked_mh(u, log_decay, b, c, chunk)
+
+
+def moe_gate_topk(logits, k, renorm: bool = True, impl: Impl | None = None):
+    impl = impl or default_impl()
+    fn = _moe.moe_gate_topk if impl == "pallas" else _ref.moe_gate_topk
+    return fn(logits, k, renorm)

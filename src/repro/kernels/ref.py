@@ -1,0 +1,180 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors its kernel's public signature exactly; tests sweep
+shapes/dtypes and assert allclose/equal between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import unary_ops
+from repro.core.coding import NO_SPIKE
+from repro.core.topk_prune import TopKNetwork
+
+
+def unary_topk_relocate(bits: jax.Array, net: TopKNetwork) -> jax.Array:
+    """Oracle: gate-level CAS evaluation (repro.core.unary_ops)."""
+    return unary_ops.topk_bits(bits, net).astype(jnp.int8)
+
+
+def unary_topk_count(bits: jax.Array, net: TopKNetwork) -> jax.Array:
+    return jnp.sum(unary_ops.topk_bits(bits, net).astype(jnp.int32), axis=-1)
+
+
+def rnl_fire_times(times: jax.Array, weights: jax.Array, *, t_steps: int,
+                   threshold: int, k: int | None = None) -> jax.Array:
+    """Oracle: closed-form potential evaluation over all ticks at once.
+
+    times (B, n), weights (Q, n) -> (B, Q).
+    """
+    t = jnp.arange(t_steps, dtype=jnp.int32)
+    rel = t[None, :, None] - times[:, None, :]          # (B, T, n)
+    active = (rel[:, None] >= 0) & (rel[:, None] < weights[None, :, None, :])
+    inc = jnp.sum(active.astype(jnp.int32), axis=-1)    # (B, Q, T)
+    if k is not None:
+        inc = jnp.minimum(inc, k)
+    pot = jnp.cumsum(inc, axis=-1)
+    hit = pot >= threshold
+    any_hit = jnp.any(hit, axis=-1)
+    first = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    return jnp.where(any_hit, first, NO_SPIKE)
+
+
+def ssd_scan(u: jax.Array, log_decay: jax.Array, b: jax.Array,
+             c: jax.Array, chunk: int = 0) -> jax.Array:
+    """Oracle: exact token-by-token recurrence via lax.scan (f32)."""
+    del chunk
+    bh, L, p = u.shape
+    n = b.shape[-1]
+
+    def step(state, xs):
+        u_t, la_t, b_t, c_t = xs
+        state = jnp.exp(la_t)[:, None, None] * state \
+            + b_t[:, :, None] * u_t[:, None, :]
+        y_t = jnp.einsum("zn,znp->zp", c_t, state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(u.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(log_decay.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    s0 = jnp.zeros((bh, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(u.dtype)
+
+
+def ssd_scan_chunked(u: jax.Array, log_decay: jax.Array, b: jax.Array,
+                     c: jax.Array, chunk: int = 128) -> jax.Array:
+    """Differentiable pure-jnp chunked SSD (same math as the Pallas kernel,
+    batched over chunks; the inter-chunk state recurrence is a short scan
+    of L/chunk steps). Serves as (a) the Pallas kernel's custom-VJP
+    backward, (b) the pjit-partitionable impl for the sharded train path.
+    """
+    bh, L, p = u.shape
+    n = b.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // chunk
+    uf = u.astype(jnp.float32).reshape(bh, nc, chunk, p)
+    la = log_decay.astype(jnp.float32).reshape(bh, nc, chunk)
+    bf = b.astype(jnp.float32).reshape(bh, nc, chunk, n)
+    cf = c.astype(jnp.float32).reshape(bh, nc, chunk, n)
+
+    g = jnp.cumsum(la, axis=-1)                         # (BH,NC,Lc)
+    seg = g[..., :, None] - g[..., None, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("zctn,zcsn->zcts", cf, bf)
+    y_intra = jnp.einsum("zcts,zcsp->zctp", cb * dmat, uf)
+
+    # per-chunk local end-state and decay
+    carry_w = jnp.exp(g[..., -1:] - g)                  # (BH,NC,Lc)
+    s_local = jnp.einsum("zcsn,zcs,zcsp->zcnp", bf, carry_w, uf)
+    a_chunk = jnp.exp(g[..., -1])                       # (BH,NC)
+
+    def chunk_step(s_in, xs):
+        a_c, s_loc = xs
+        s_out = a_c[:, None, None] * s_in + s_loc
+        return s_out, s_in                               # emit INCOMING state
+
+    s0 = jnp.zeros((bh, n, p), jnp.float32)
+    _, s_in_seq = jax.lax.scan(
+        chunk_step, s0, (jnp.moveaxis(a_chunk, 1, 0),
+                         jnp.moveaxis(s_local, 1, 0)))
+    s_in = jnp.moveaxis(s_in_seq, 0, 1)                 # (BH,NC,N,P)
+
+    y_inter = jnp.exp(g)[..., None] * jnp.einsum("zctn,zcnp->zctp", cf, s_in)
+    y = (y_intra + y_inter).reshape(bh, nc * chunk, p)
+    return y[:, :L].astype(u.dtype)
+
+
+def ssd_scan_chunked_mh(u: jax.Array, log_decay: jax.Array, b: jax.Array,
+                        c: jax.Array, chunk: int = 128) -> jax.Array:
+    """Multi-head chunked SSD with B/C shared across heads (Mamba2's single
+    B/C group): the head axis stays inside the einsums so the (B, L, N)
+    projections are never materialized per head — an H-fold activation-
+    traffic saving over vmapping :func:`ssd_scan_chunked` (§Perf H2).
+
+    Shapes: u (B, H, L, P); log_decay (B, H, L); b, c (B, L, N).
+    Returns y (B, H, L, P).
+    """
+    bsz, h, L, p = u.shape
+    n = b.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // chunk
+    uf = u.astype(jnp.float32).reshape(bsz, h, nc, chunk, p)
+    la = log_decay.astype(jnp.float32).reshape(bsz, h, nc, chunk)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    g = jnp.cumsum(la, axis=-1)                       # (B,H,NC,Lc)
+    seg = g[..., :, None] - g[..., None, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(causal, jnp.exp(seg), 0.0)       # (B,H,NC,Lc,Lc)
+    cb = jnp.einsum("zctn,zcsn->zcts", cf, bf)        # shared across heads
+    y_intra = jnp.einsum("zhcts,zhcsp->zhctp", cb[:, None] * dmat, uf)
+
+    carry_w = jnp.exp(g[..., -1:] - g)                # (B,H,NC,Lc)
+    s_local = jnp.einsum("zcsn,zhcs,zhcsp->zhcnp", bf, carry_w, uf)
+    a_chunk = jnp.exp(g[..., -1])                     # (B,H,NC)
+
+    def chunk_step(s_in, xs):
+        a_c, s_loc = xs
+        s_out = a_c[..., None, None] * s_in + s_loc
+        return s_out, s_in
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, s_in_seq = jax.lax.scan(
+        chunk_step, s0, (jnp.moveaxis(a_chunk, 2, 0),
+                         jnp.moveaxis(s_local, 2, 0)))
+    s_in = jnp.moveaxis(s_in_seq, 0, 2)               # (B,H,NC,N,P)
+
+    y_inter = jnp.exp(g)[..., None] * jnp.einsum(
+        "zctn,zhcnp->zhctp", cf, s_in)
+    y = (y_intra + y_inter).reshape(bsz, h, nc * chunk, p)
+    return y[:, :, :L].astype(u.dtype)
+
+
+def moe_gate_topk(logits: jax.Array, k: int, renorm: bool = True):
+    """Oracle: jax.lax.top_k + softmax."""
+    x = logits.astype(jnp.float32)
+    probs_full = jax.nn.softmax(x, axis=-1)
+    tv, ti = jax.lax.top_k(x, k)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    denom = jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True)
+    probs = jnp.exp(tv - m) / denom
+    if renorm:
+        probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    del probs_full
+    return probs, ti.astype(jnp.int32)

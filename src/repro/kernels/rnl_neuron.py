@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused SRM0-RNL neuron bank.
+
+Fuses the whole neuron pipeline — RNL response generation (Eq. 1), dendrite
+accumulation (full-PC or Catwalk top-k-clipped), soma threshold, fire-time
+detection — over a (batch x neurons) tile, sweeping gamma-cycle ticks in a
+``fori_loop`` so the bit-plane (B, Q, n) working set stays in VMEM and HBM
+traffic is one read of spike times/weights + one write of fire times.
+
+Grid: (batch tiles, neuron tiles). Block shapes:
+  times   (B_TILE, n)     int32
+  weights (Q_TILE, n)     int32
+  fire    (B_TILE, Q_TILE) int32 out
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+from repro.core.coding import NO_SPIKE
+
+#: plain Python int (Pallas kernels may not capture array constants)
+NO_SPIKE_INT = int(NO_SPIKE)
+
+B_TILE = 8
+Q_TILE = 8
+
+
+def _rnl_kernel(times_ref, weights_ref, out_ref, *, t_steps, threshold, k):
+    times = times_ref[...]                            # (B, n)
+    w = weights_ref[...]                              # (Q, n)
+
+    def tick(t, carry):
+        pot, fired = carry
+        rel = t - times[:, None, :]                   # (B, 1, n)
+        active = (rel >= 0) & (rel < w[None, :, :])   # (B, Q, n)
+        inc = jnp.sum(active.astype(jnp.int32), axis=-1)   # (B, Q)
+        if k is not None:
+            inc = jnp.minimum(inc, k)                 # Catwalk clip
+        pot = pot + inc
+        newly = (pot >= threshold) & (fired == NO_SPIKE_INT)
+        fired = jnp.where(newly, t, fired)
+        return pot, fired
+
+    b, q = times.shape[0], w.shape[0]
+    pot0 = jnp.zeros((b, q), jnp.int32)
+    fire0 = jnp.full((b, q), NO_SPIKE_INT, jnp.int32)
+    _, fired = jax.lax.fori_loop(0, t_steps, tick, (pot0, fire0))
+    out_ref[...] = fired
+
+
+@functools.partial(jax.jit, static_argnames=("t_steps", "threshold", "k"))
+def rnl_fire_times(times: jax.Array, weights: jax.Array, *, t_steps: int,
+                   threshold: int, k: int | None = None) -> jax.Array:
+    """Fire times of a neuron bank.
+
+    Args:
+      times:   (B, n) int32 input spike times (NO_SPIKE = silent line).
+      weights: (Q, n) int32 synaptic weights (one row per neuron).
+      t_steps: gamma-cycle length.
+      threshold: firing threshold.
+      k: None -> full-PC dendrite; int -> Catwalk top-k clipped dendrite.
+
+    Returns:
+      (B, Q) int32 fire times (NO_SPIKE where the neuron stays silent).
+    """
+    bsz, n = times.shape
+    qsz, n2 = weights.shape
+    assert n == n2, (times.shape, weights.shape)
+    b_pad = common.round_up(bsz, B_TILE)
+    q_pad = common.round_up(qsz, Q_TILE)
+    # pad silent lines / zero-weight neurons: they never fire, harmless
+    times_p = jnp.pad(times, ((0, b_pad - bsz), (0, 0)),
+                      constant_values=int(NO_SPIKE))
+    weights_p = jnp.pad(weights, ((0, q_pad - qsz), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rnl_kernel, t_steps=t_steps, threshold=threshold,
+                          k=k),
+        out_shape=jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32),
+        grid=(b_pad // B_TILE, q_pad // Q_TILE),
+        in_specs=[
+            pl.BlockSpec((B_TILE, n), lambda b, q: (b, 0)),
+            pl.BlockSpec((Q_TILE, n), lambda b, q: (q, 0)),
+        ],
+        out_specs=pl.BlockSpec((B_TILE, Q_TILE), lambda b, q: (b, q)),
+        interpret=common.use_interpret(),
+    )(times_p, weights_p)
+    return out[:bsz, :qsz]

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+The perf-critical compute of the ``mamba2-780m`` / ``zamba2-1.2b`` assigned
+architectures (and the only sub-quadratic path for the ``long_500k`` cell).
+
+Recurrence per head (all f32 in-kernel):
+    S_t = a_t * S_{t-1} + B_t (x) u_t          (N x P state)
+    y_t = C_t . S_t
+
+Chunked formulation (chunk = CHUNK tokens, log-space decays for stability):
+    g_t   = cumsum(log a)                       within chunk
+    y     = ((C B^T) o D) U + exp(g) * (C S_in)        D_ts = exp(g_t - g_s), s<=t
+    S_out = exp(g_L) S_in + B^T diag(exp(g_L - g_s)) U
+
+TPU mapping: the three GEMMs per chunk ((Lc,N)x(N,Lc), (Lc,Lc)x(Lc,P),
+(N,Lc)x(Lc,P)) run on the MXU with Lc = N = 128-aligned tiles; the running
+state (N, P) lives in a VMEM scratch that persists across the sequential
+chunk grid dimension (standard TPU accumulator pattern), so HBM traffic is
+one pass over x/B/C/decays + one write of y: arithmetic intensity
+O(CHUNK) vs the O(1) of a naive scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+CHUNK = 128
+
+
+def _ssd_kernel(u_ref, logdecay_ref, b_ref, c_ref, y_ref, state, *, nchunks):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    u = u_ref[0].astype(jnp.float32)          # (Lc, P)
+    la = logdecay_ref[0].astype(jnp.float32)  # (Lc,)
+    bmat = b_ref[0].astype(jnp.float32)       # (Lc, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (Lc, N)
+
+    g = jnp.cumsum(la)                        # (Lc,)
+    lc = u.shape[0]
+    seg = g[:, None] - g[None, :]             # log(g_t / g_s)
+    causal = jnp.arange(lc)[:, None] >= jnp.arange(lc)[None, :]
+    decay_mat = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    cb = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)
+    y_intra = jnp.dot(cb * decay_mat, u, preferred_element_type=jnp.float32)
+    s_in = state[...]
+    y_inter = jnp.exp(g)[:, None] * jnp.dot(cmat, s_in,
+                                            preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    carry_decay = jnp.exp(g[-1] - g)[:, None] * u          # (Lc, P)
+    state[...] = (jnp.exp(g[-1]) * s_in
+                  + jnp.dot(bmat.T, carry_decay,
+                            preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def ssd_scan(u: jax.Array, log_decay: jax.Array, b: jax.Array, c: jax.Array,
+             chunk: int = CHUNK) -> jax.Array:
+    """Chunked SSD scan (Pallas forward; ref-chunked custom VJP — Pallas
+    interpret mode has no JVP rule, and on TPU the recompute-based backward
+    is the standard memory/compute trade for scan kernels).
+
+    Args:
+      u:        (BH, L, P) dt-scaled inputs (any float dtype).
+      log_decay:(BH, L)    log a_t <= 0.
+      b:        (BH, L, N) input projections.
+      c:        (BH, L, N) output projections.
+      chunk:    chunk length (sequential grid dim).
+
+    Returns:
+      y: (BH, L, P), same dtype as u.
+    """
+    return _ssd_forward(u, log_decay, b, c, chunk)
+
+
+def _ssd_fwd_rule(u, log_decay, b, c, chunk):
+    return _ssd_forward(u, log_decay, b, c, chunk), (u, log_decay, b, c)
+
+
+def _ssd_bwd_rule(chunk, res, gy):
+    from repro.kernels import ref as _ref
+    u, log_decay, b, c = res
+    _, vjp = jax.vjp(
+        lambda uu, ll, bb, cc: _ref.ssd_scan_chunked(uu, ll, bb, cc, chunk),
+        u, log_decay, b, c)
+    return vjp(gy)
+
+
+ssd_scan.defvjp(_ssd_fwd_rule, _ssd_bwd_rule)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _ssd_forward(u: jax.Array, log_decay: jax.Array, b: jax.Array,
+                 c: jax.Array, chunk: int = CHUNK) -> jax.Array:
+    bh, L, p = u.shape
+    n = b.shape[-1]
+    L_pad = common.round_up(L, chunk)
+    pad = L_pad - L
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nchunks = L_pad // chunk
+    y = _ssd_call(u, log_decay, b, c, bh, L_pad, p, n, chunk, nchunks)
+    return y[:, :L]
+
+
+def _ssd_call(u, log_decay, b, c, bh, L_pad, p, n, chunk, nchunks):
+    from jax.experimental.pallas import tpu as pltpu
+    scratch = [pltpu.VMEM((n, p), jnp.float32)]
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, nchunks=nchunks),
+        out_shape=jax.ShapeDtypeStruct((bh, L_pad, p), u.dtype),
+        grid=(bh, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, ci: (h, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda h, ci: (h, ci)),
+            pl.BlockSpec((1, chunk, n), lambda h, ci: (h, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, ci: (h, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda h, ci: (h, ci, 0)),
+        scratch_shapes=scratch,
+        interpret=common.use_interpret(),
+    )(u, log_decay, b, c)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: unary top-k relocation over spike bit-planes.
+
+Hardware adaptation (DESIGN.md §3.1): the ASIC applies the CAS network to
+one n-bit volley per clock; on TPU we batch whole gamma cycles — the input
+is a ``(rows, n)`` bit-plane tensor (rows = batch x time flattened by the
+wrapper) and the CAS network is evaluated as vectorized min/max lane ops.
+
+The (static) network is packed into *depth layers* of disjoint CAS units.
+Each layer becomes: one gather of the partner lane (a static permutation),
+one elementwise min, one max, and a 3-way select — O(depth) vector ops per
+tile instead of O(units) scalar gates. Block shape: (ROW_TILE, n_pad) in
+VMEM; n <= 128 keeps a full volley inside one lane register row.
+
+The output is the relocated bit-plane restricted to the bottom-k wires
+(the Catwalk dendrite's PC input); ``sum == min(popcount, k)`` per row.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+from repro.core.topk_prune import TopKNetwork
+
+ROW_TILE = 256
+
+
+def pack_layers(units: Sequence[Tuple[int, int]], n: int):
+    """Greedily pack CAS units into layers of disjoint wire pairs.
+
+    Returns per-layer (partner_perm, take_min_mask, take_max_mask) numpy
+    arrays; wires untouched by a layer keep their value (perm = identity,
+    both masks false).
+    """
+    layers = []
+    current: list[Tuple[int, int]] = []
+    busy: set[int] = set()
+    for (i, j) in units:
+        if i in busy or j in busy:
+            layers.append(current)
+            current, busy = [], set()
+        current.append((i, j))
+        busy.update((i, j))
+    if current:
+        layers.append(current)
+
+    packed = []
+    for layer in layers:
+        perm = np.arange(n, dtype=np.int32)
+        take_min = np.zeros((n,), dtype=bool)
+        take_max = np.zeros((n,), dtype=bool)
+        for (i, j) in layer:
+            perm[i], perm[j] = j, i
+            take_min[i] = True      # wire i <- AND/min
+            take_max[j] = True      # wire j <- OR/max
+        packed.append((perm, take_min, take_max))
+    return packed
+
+
+def _topk_kernel(bits_ref, perm_ref, min_ref, max_ref, out_ref, *, depth,
+                 n, k):
+    x = bits_ref[...]                                 # (ROW_TILE, n) int8
+    for d in range(depth):                            # static unroll
+        p = jnp.take(x, perm_ref[d], axis=1)          # partner lanes
+        mn = jnp.minimum(x, p)                        # AND on bits
+        mx = jnp.maximum(x, p)                        # OR on bits
+        x = jnp.where(min_ref[d][None, :] != 0, mn,
+                      jnp.where(max_ref[d][None, :] != 0, mx, x))
+    out_ref[...] = x[:, n - k:]
+
+
+@functools.partial(jax.jit, static_argnames=("net",))
+def unary_topk_relocate(bits: jax.Array, net: TopKNetwork) -> jax.Array:
+    """Relocate active bits to the bottom-k wires via the CAS network.
+
+    Args:
+      bits: (..., n) bool/int8 per-tick dendrite bits.
+      net:  a pruned top-k network (repro.core.topk_prune).
+
+    Returns:
+      (..., k) int8 relocated bits (thermometer of min(popcount, k)).
+    """
+    n, k = net.n, net.k
+    lead = bits.shape[:-1]
+    rows = int(np.prod(lead)) if lead else 1
+    x = bits.reshape(rows, n).astype(jnp.int8)
+    rows_pad = common.round_up(max(rows, 1), ROW_TILE)
+    x = jnp.pad(x, ((0, rows_pad - rows), (0, 0)))
+
+    packed = pack_layers(net.units, n)
+    depth = len(packed)
+    # layer tables ride in as kernel inputs (Pallas forbids captured consts)
+    perm = jnp.asarray(np.stack([p for p, _, _ in packed]), jnp.int32)
+    mn = jnp.asarray(np.stack([m for _, m, _ in packed]), jnp.int8)
+    mx = jnp.asarray(np.stack([m for _, _, m in packed]), jnp.int8)
+
+    table_spec = pl.BlockSpec((depth, n), lambda r: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_topk_kernel, depth=depth, n=n, k=k),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, k), jnp.int8),
+        grid=(rows_pad // ROW_TILE,),
+        in_specs=[pl.BlockSpec((ROW_TILE, n), lambda r: (r, 0)),
+                  table_spec, table_spec, table_spec],
+        out_specs=pl.BlockSpec((ROW_TILE, k), lambda r: (r, 0)),
+        interpret=common.use_interpret(),
+    )(x, perm, mn, mx)
+    return out[:rows].reshape(*lead, k)
+
+
+def unary_topk_count(bits: jax.Array, net: TopKNetwork) -> jax.Array:
+    """Small-PC output: per-row count of relocated bits."""
+    return jnp.sum(unary_topk_relocate(bits, net).astype(jnp.int32), axis=-1)

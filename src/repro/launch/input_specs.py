@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, zero allocation — the dry-run lowers against these.
+
+``input_specs(cfg, shape)`` returns the batch dict for the given cell kind:
+  train   -> {tokens, labels[, patches | frames]}
+  prefill -> {tokens[, patches | frames]}
+  decode  -> {tokens (B, 1)}  (the serve cache is built separately)
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend.n_tokens, cfg.frontend.d_embed), bf16)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.encoder_seq, cfg.frontend.d_embed), bf16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend.n_tokens, cfg.frontend.d_embed), bf16)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.encoder_seq, cfg.frontend.d_embed), bf16)
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(shape.kind)
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k needs sub-quadratic sequence mixing (assignment rule)."""
+    if shape.name == "long_500k" and cfg.full_attention_only:
+        return False
+    return True

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices before any jax
+import; tests and benches see the real single device).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; (2,16,16) = 512 chips across 2 pods.
+
+    Axes: ``pod`` (outer DP, crosses the slow inter-pod links), ``data``
+    (intra-pod DP / FSDP), ``model`` (TP/EP).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh for CPU integration tests (requires that many host
+    devices; see tests/conftest notes)."""
+    return jax.make_mesh((data, model), ("data", "model"))

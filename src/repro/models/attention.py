@@ -1,0 +1,175 @@
+"""Attention mixers: GQA (grouped-query) and MLA (multi-head latent).
+
+Both support three execution modes driven by the same parameters:
+  * full-sequence (training / prefill): causal or bidirectional;
+  * cached decode: one new token against a (B, S_max) KV cache;
+  * cross-attention (enc-dec): keys/values from encoder output, no mask.
+
+MLA (deepseek-v2) caches the compressed latent c_kv (kv_lora_rank) + the
+shared rotary key (d_rope) instead of full per-head K/V — the same
+"store the compact relocated form, expand on use" shape as the paper's
+Catwalk dendrite, at KV-cache granularity (576 vs 2*H*128 floats/token).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # GQA: (B, S, Hkv, Dh) | MLA: (B, S, kv_lora)
+    v: jax.Array          # GQA: (B, S, Hkv, Dh) | MLA: (B, S, d_rope)
+    pos: jax.Array        # () int32 — tokens already in cache
+
+
+# =============================================================== GQA ======
+def gqa_init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": L.dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": L.dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": L.dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _sdpa(q, k, v, *, causal: bool, q_pos=None, kv_valid=None):
+    """q (B,Sq,H,D); k/v (B,Sk,G,D) with H = G*rep. f32 softmax."""
+    b, sq, h, dh = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qf = q.reshape(b, sq, g, rep, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qf, kf) / np.sqrt(dh)
+    sk = k.shape[1]
+    if causal:
+        qp = (jnp.arange(sq) if q_pos is None else q_pos)
+        mask = qp[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_valid is not None:                      # decode: mask empty slots
+        scores = jnp.where(kv_valid[None, None, None, None, :], scores,
+                           NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, vf)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def gqa_apply(p, x, cfg: ModelConfig, *, causal=True, positions=None,
+              cache: Optional[KVCache] = None, kv_input=None):
+    """x (B,S,D). kv_input: encoder output for cross-attention (no rope).
+
+    With ``cache``: appends this call's K/V at cache.pos and attends over
+    the full cache (decode). Returns (out, new_cache | None)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        base = jnp.arange(s)[None, :].astype(jnp.int32)
+        positions = base if cache is None else cache.pos + base
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    src = x if kv_input is None else kv_input
+    k = (src @ p["wk"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if kv_input is None:                              # self-attn: rope
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k, cache.pos, 1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v, cache.pos, 1)
+        new_cache = KVCache(k_all, v_all, cache.pos + s)
+        kv_valid = jnp.arange(k_all.shape[1]) < (cache.pos + s)
+        out = _sdpa(q, k_all, v_all, causal=False, kv_valid=kv_valid)
+    else:
+        out = _sdpa(q, k, v, causal=causal and kv_input is None)
+    return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+# =============================================================== MLA ======
+def mla_init(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    kq, kd, ku, kr, ko = jax.random.split(key, 5)
+    return {
+        "wq": L.dense_init(kq, d, h * (m.d_nope + m.d_rope), dtype),
+        "w_dkv": L.dense_init(kd, d, m.kv_lora_rank, dtype),
+        "w_ukv": L.dense_init(ku, m.kv_lora_rank,
+                              h * (m.d_nope + m.d_v), dtype),
+        "w_kr": L.dense_init(kr, d, m.d_rope, dtype),
+        "wo": L.dense_init(ko, h * m.d_v, d, dtype),
+    }
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions=None,
+              cache: Optional[KVCache] = None):
+    """Multi-head latent attention; cache holds (c_kv, k_rope)."""
+    m: MLAConfig = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        base = jnp.arange(s)[None, :].astype(jnp.int32)
+        positions = base if cache is None else cache.pos + base
+
+    q = (x @ p["wq"]).reshape(b, s, h, m.d_nope + m.d_rope)
+    q_nope, q_rope = q[..., :m.d_nope], q[..., m.d_nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"]                               # (B,S,R) latent
+    k_rope = L.apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0]      # (B,S,d_rope)
+
+    kv_valid = None
+    new_cache = None
+    if cache is not None:
+        c_all = jax.lax.dynamic_update_slice_in_dim(cache.k, c_kv,
+                                                    cache.pos, 1)
+        r_all = jax.lax.dynamic_update_slice_in_dim(cache.v, k_rope,
+                                                    cache.pos, 1)
+        new_cache = KVCache(c_all, r_all, cache.pos + s)
+        kv_valid = jnp.arange(c_all.shape[1]) < (cache.pos + s)
+        c_kv, k_rope = c_all, r_all
+
+    kv = (c_kv @ p["w_ukv"]).reshape(b, c_kv.shape[1], h, m.d_nope + m.d_v)
+    k_nope, v = kv[..., :m.d_nope], kv[..., m.d_nope:]
+
+    qf = q_nope.astype(jnp.float32)
+    kf = k_nope.astype(jnp.float32)
+    scores = jnp.einsum("bshd,bthd->bhst", qf, kf)
+    scores += jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    scores /= np.sqrt(m.d_nope + m.d_rope)
+    sk = scores.shape[-1]
+    if cache is None:
+        mask = positions[:, :, None] >= jnp.arange(sk)[None, None, :]
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+    else:
+        scores = jnp.where(kv_valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, s, -1).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return KVCache(jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                   jnp.zeros((batch, max_len, m.d_rope), dtype),
+                   jnp.zeros((), jnp.int32))

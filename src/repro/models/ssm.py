@@ -1,0 +1,133 @@
+"""Mamba2 (SSD) block: projections + causal conv + chunked state scan.
+
+Uses the ``ssd_scan`` kernel (Pallas on TPU / ref under pjit) for the
+sequence mixer. The block follows the Mamba2 layout with a single B/C
+group shared across heads:
+
+    x,z,B,C,dt = in_proj(u)
+    x = silu(causal_conv1d(x));  B,C conv'd likewise
+    a_t = exp(-softplus(dt + dt_bias) * exp(A_log))        per head
+    y = SSD(x * dt, log a, B, C);  y = rmsnorm(y * silu(z)); out_proj
+
+Decode keeps (conv window, SSD state) as the cache — O(1) per token, which
+is what makes the ``long_500k`` cell feasible (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, K-1, d_conv_in) rolling conv window
+    state: jax.Array   # (B, H, N, P) SSD state (f32)
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    n = s.d_state
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * n + h          # x, z, B, C, dt
+    return {
+        "in_proj": L.dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, di + 2 * n),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "norm": L.rmsnorm_init(di),
+        "out_proj": L.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, h = s.d_inner(d), s.d_state, s.n_heads(d)
+    x = proj[..., :di]
+    z = proj[..., di:2 * di]
+    b = proj[..., 2 * di:2 * di + n]
+    c = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return x, z, b, c, dt
+
+
+def _causal_conv(seq, w):
+    """seq (B, L, C), w (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + seq.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return out.astype(seq.dtype)
+
+
+def ssm_apply(p, u, cfg: ModelConfig, *, cache: Optional[SSMCache] = None
+              ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """u (B, L, D). With cache: L must be 1 (single-token decode)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, h, pdim = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    bsz, ln, _ = u.shape
+    proj = u @ p["in_proj"]
+    x, z, b, c, dt = _split(cfg, proj)
+    conv_in = jnp.concatenate([x, b, c], axis=-1)       # (B, L, di+2n)
+
+    new_cache = None
+    if cache is None:
+        conv_out = _causal_conv(conv_in, p["conv_w"])
+    else:
+        window = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B,K,C)
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))[:, None]
+        conv_out = conv_out.astype(u.dtype)
+        new_conv = window[:, 1:]
+    conv_out = jax.nn.silu(conv_out)
+    x = conv_out[..., :di]
+    b = conv_out[..., di:di + n]
+    c = conv_out[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    log_decay = -dt * jnp.exp(p["a_log"])                         # (B,L,H)
+    xh = x.reshape(bsz, ln, h, pdim)
+    uin = xh * dt[..., None].astype(x.dtype)                      # dt-scaled
+
+    if cache is None:
+        # heads stay inside the einsums; B/C shared across heads (H2)
+        u_k = uin.transpose(0, 2, 1, 3)                       # (B,H,L,P)
+        ld_k = log_decay.transpose(0, 2, 1)                   # (B,H,L)
+        y = ops.ssd_scan_mh(u_k, ld_k, b, c, chunk=s.chunk)
+        y = y.transpose(0, 2, 1, 3)
+    else:
+        # exact single-step recurrence against the cached state
+        a = jnp.exp(log_decay[:, 0]).astype(jnp.float32)          # (B,H)
+        st = cache.state * a[..., None, None] \
+            + b[:, 0, None, :, None].astype(jnp.float32) \
+            * uin[:, 0, :, None, :].astype(jnp.float32)           # (B,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), st)
+        y = y[:, None].reshape(bsz, 1, h, pdim).astype(u.dtype)
+        new_cache = SSMCache(conv=new_conv, state=st)
+
+    y = y.reshape(bsz, ln, di) * jax.nn.silu(z)
+    y = L.rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"], new_cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, h = s.d_inner(d), s.d_state, s.n_heads(d)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_kernel - 1, di + 2 * n), dtype),
+        state=jnp.zeros((batch, h, n, s.head_dim), jnp.float32),
+    )

@@ -1,0 +1,77 @@
+"""Catwalk-style top-k gradient compression with error feedback.
+
+The paper's insight — relocate the few active elements, pay only for k —
+applied to the cross-pod gradient all-reduce (DESIGN.md §3.3b): per tensor,
+keep the top-k-magnitude fraction of (gradient + error buffer) entries,
+zero the rest, and carry the residual forward in the error buffer
+(Stich et al.-style EF-SGD). The sparse tensor all-reduces at ~rho of the
+dense byte cost over the slow pod links; error feedback keeps convergence
+(validated in tests on a convex quadratic and in the clipping study).
+
+``rho`` is the kept fraction; k = ceil(rho * size). Selection is per-chunk
+(CHUNK entries) so the top-k never materializes a global sort — mirroring
+the paper's fixed-k per-volley clip, and keeping the op fusible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    rho: float = 0.01          # kept fraction per chunk
+    enabled: bool = True
+
+
+class EFState(NamedTuple):
+    error: Any                 # residual buffer, same structure as grads
+
+
+def init_ef(params) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_mask_chunked(x: jax.Array, rho: float) -> jax.Array:
+    """Keep the top ceil(rho*CHUNK) |entries| of each CHUNK-slice."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % CHUNK
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, CHUNK)
+    k = max(1, int(rho * CHUNK))
+    thresh = jax.lax.top_k(jnp.abs(chunks), k)[0][:, -1:]
+    mask = (jnp.abs(chunks) >= thresh).astype(x.dtype)
+    return mask.reshape(-1)[:n].reshape(x.shape)
+
+
+def compress_grads(grads, ef: EFState, cfg: CompressionConfig
+                   ) -> Tuple[Any, EFState, dict]:
+    """Returns (sparse grads, new error state, stats)."""
+    if not cfg.enabled:
+        return grads, ef, {"kept_fraction": jnp.ones(())}
+
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        mask = _topk_mask_chunked(acc, cfg.rho)
+        sparse = acc * mask
+        return sparse.astype(g.dtype), acc - sparse, jnp.mean(mask)
+
+    out = jax.tree.map(one, grads, ef.error)
+    is_t = lambda t: isinstance(t, tuple)
+    sparse = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+    kept = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+    # element-weighted: tiny tensors (norm scales) ride along uncompressed
+    sizes = jnp.stack([jnp.float32(l.size)
+                       for l in jax.tree.leaves(grads)])
+    fracs = jnp.stack(jax.tree.leaves(kept))
+    mean_kept = jnp.sum(fracs * sizes) / jnp.sum(sizes)
+    return sparse, EFState(error=err), {"kept_fraction": mean_kept}

@@ -1,0 +1,129 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / link_bw
+
+where per-chip quantities come from the SPMD-partitioned module
+(``compiled.cost_analysis()`` and the optimized HLO text), so these equal
+the prompt's global formulations (global = per_chip * chips) exactly.
+Collective bytes are the summed OUTPUT buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op — a per-chip traffic proxy (ring all-reduce moves ~2x this; noted in
+EXPERIMENTS.md methodology).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment constants).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12           # bf16 per chip
+HBM_BW = 819e9                # bytes/s per chip
+LINK_BW = 50e9                # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped buffer, e.g. bf16[128,4096]{1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-buffer bytes per collective kind from (optimized,
+    partitioned) HLO text. ``-start`` ops are counted, ``-done`` skipped to
+    avoid double counting async pairs."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in m.group(0):
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops: float            # 6*N*D (train) or 2*N*D (inference)
+    useful_flops_ratio: float     # model_flops / (flops_per_chip * chips)
+    #: ideal_time / step_time_bound: fraction of the compute roofline this
+    #: cell reaches if the dominant term were the only limit
+    roofline_fraction: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def compute_terms(*, flops_per_chip: float, bytes_per_chip: float,
+                  coll_bytes_per_chip: float, chips: int,
+                  model_flops_global: float) -> RooflineTerms:
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = bytes_per_chip / HBM_BW
+    collective_s = coll_bytes_per_chip / LINK_BW
+    hlo_global = flops_per_chip * chips
+    useful = model_flops_global / hlo_global if hlo_global else 0.0
+    t = RooflineTerms(compute_s, memory_s, collective_s, flops_per_chip,
+                      bytes_per_chip, coll_bytes_per_chip,
+                      model_flops_global, useful)
+    ideal_s = model_flops_global / (chips * PEAK_FLOPS)
+    t.roofline_fraction = ideal_s / t.step_time_s if t.step_time_s else 0.0
+    return t
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for one
+    forward (prefill); decode processes global_batch tokens per step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # one new token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,226 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production
+meshes.
+
+Axes (launch/mesh.py): ``data`` (+ outer ``pod`` on the multi-pod mesh) is
+the data-parallel dimension; ``model`` carries tensor/expert parallelism:
+
+  * attention projections: heads over ``model`` (TP)
+  * MLP in/out: d_ff over ``model`` (TP)
+  * MoE experts: E over ``model`` (EP) and expert d_ff over the DP axes
+    (FSDP-style, ZeRO-3) — arctic-480b would not fit per-device otherwise
+  * embeddings: vocab over ``model``
+  * SSM in/out projections: d_inner over ``model``
+  * norms / biases / routers: replicated
+
+Every rule degrades to replication when a dimension is not divisible by
+the axis size (e.g. glm4's 2 KV heads on a 16-way model axis) — the
+fallback keeps all 40 dry-run cells compiling with the same rule set.
+Stacked-layer leaves (leading L axis from scan) get a leading ``None``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+def axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def _fit(mesh: Mesh, dim: int, axis: Axis) -> Axis:
+    """Use ``axis`` if it divides ``dim``, else try prefixes, else None."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if dim % axis_size(mesh, axis) == 0 else None
+    for cut in range(len(axis), 0, -1):
+        cand = axis[:cut] if cut > 1 else axis[0]
+        if dim % axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+#: parameter-name -> (spec builder). Specs are for the UNSTACKED leaf; a
+#: leading None is prepended for scan-stacked layers.
+def _param_spec_base(name: str, shape: Tuple[int, ...], mesh: Mesh,
+                     replicate_embed: bool = False) -> P:
+    dp = dp_axes(mesh)
+    last = name.rsplit("/", 1)[-1]
+
+    def col(d_out_idx=-1):
+        """Column-parallel: shard output dim over model."""
+        ax = _fit(mesh, shape[d_out_idx], "model")
+        spec = [None] * len(shape)
+        spec[d_out_idx] = ax
+        return P(*spec)
+
+    def row(d_in_idx=0):
+        ax = _fit(mesh, shape[d_in_idx], "model")
+        spec = [None] * len(shape)
+        spec[d_in_idx] = ax
+        return P(*spec)
+
+    if last == "embed":
+        if replicate_embed:           # H8: batch_over_model (ZeRO-3) mode
+            return P(None, None)
+        return P(_fit(mesh, shape[0], "model"), None)
+    if last == "lm_head":
+        return P(None, None) if replicate_embed else col()
+    # --- MoE expert stacks: (E, D, F) / (E, F, D) --------------------
+    if "moe" in name and last in ("w_gate", "w_up") and len(shape) == 3:
+        return P(_fit(mesh, shape[0], "model"), None,
+                 _fit(mesh, shape[2], dp))
+    if "moe" in name and last == "w_down" and len(shape) == 3:
+        return P(_fit(mesh, shape[0], "model"),
+                 _fit(mesh, shape[1], dp), None)
+    if last == "router":
+        return P(None, None)
+    # --- attention / MLP / SSM projections ---------------------------
+    if last in ("wq", "wk", "wv", "w_ukv", "w_gate", "w_up", "in_proj"):
+        return col()
+    if last in ("wo", "w_down", "out_proj"):
+        return row()
+    if last in ("w_dkv", "w_kr", "patch_proj", "frame_proj", "conv_w"):
+        return P(*([None] * len(shape)))
+    # norms, dt_bias, a_log, scalars
+    return P(*([None] * len(shape)))
+
+
+_STACK_KEYS = ("layers", "encoder")
+
+
+def param_pspec(path, leaf, mesh: Mesh, replicate_embed: bool = False) -> P:
+    """Leaf spec; robust to optimizer-state prefixes (state.params /
+    state.opt.m / state.opt.v all share the parameter's layout)."""
+    name = _leaf_name(path)
+    shape = leaf.shape
+    segs = name.split("/")
+    stacked = any(s in _STACK_KEYS for s in segs[:-1])
+    if stacked:
+        base = _param_spec_base(name, tuple(shape[1:]), mesh,
+                                replicate_embed)
+        return P(None, *base)
+    return _param_spec_base(name, tuple(shape), mesh, replicate_embed)
+
+
+def param_shardings(params_shape, mesh: Mesh, replicate_embed: bool = False):
+    """NamedSharding tree for a params (shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_pspec(p, l, mesh,
+                                                     replicate_embed)),
+        params_shape)
+
+
+# ------------------------------------------------------------ activations
+def batch_pspec(mesh: Mesh, batch: int, extra_dims: int = 1,
+                over_model: bool = False) -> P:
+    """Shard the leading batch dim over as much DP as divides it;
+    ``over_model`` additionally folds the model axis into DP (ZeRO-3
+    regime for models without tensor-parallel activations)."""
+    axes = dp_axes(mesh) + (("model",) if over_model else ())
+    ax = _fit(mesh, batch, axes)
+    return P(ax, *([None] * extra_dims))
+
+
+def data_shardings(mesh: Mesh, batch_shapes, over_model: bool = False) -> dict:
+    """batch_shapes: dict name -> jax.ShapeDtypeStruct."""
+    out = {}
+    for k, v in batch_shapes.items():
+        out[k] = NamedSharding(
+            mesh, batch_pspec(mesh, v.shape[0], len(v.shape) - 1,
+                              over_model))
+    return out
+
+
+def param_pspecs(params_shape, mesh: Mesh, replicate_embed: bool = False):
+    """PartitionSpec tree (for with_sharding_constraint on grads)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_pspec(p, l, mesh, replicate_embed), params_shape)
+
+
+def cache_pspec(path, leaf, mesh: Mesh) -> P:
+    """Serve-state sharding: batch over DP; KV heads over model when they
+    divide; SSD state heads over model."""
+    name = _leaf_name(path)
+    shape = leaf.shape
+    if name.endswith("pos") or leaf.ndim == 0:
+        return P()
+    stacked = name.startswith("layer_caches")
+    body = tuple(shape[1:]) if stacked else tuple(shape)
+    dp = dp_axes(mesh)
+    spec: list = [None] * len(body)
+    if len(body) >= 1:
+        spec[0] = _fit(mesh, body[0], dp)            # batch dim
+    if len(body) == 4:                               # (B,S,Hkv,D) | (B,H,N,P)
+        spec[2] = _fit(mesh, body[2], "model") if name.endswith(
+            ("/k", "/v")) else spec[2]
+        if "state" in name:
+            spec[1] = _fit(mesh, body[1], "model")   # SSD heads
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def serve_shardings(state_shape, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_pspec(p, l, mesh)),
+        state_shape)
+
+
+# ------------------------------------------------- in-model constraints
+def maybe_wsc(x, *spec):
+    """with_sharding_constraint that degrades to identity when the named
+    axes are absent (CPU unit tests, single-device benches). ``spec``
+    entries are axis names, tuples of axis names, or None; axes that do
+    not divide the corresponding dim are dropped."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or not am.axis_names:
+        return x
+    names = set(am.axis_names)
+
+    def ok(entry, dim):
+        if entry is None:
+            return None
+        entry_t = entry if isinstance(entry, tuple) else (entry,)
+        avail = tuple(a for a in entry_t if a in names)
+        if not avail:
+            return None
+        size = int(np.prod([am.shape[a] for a in avail]))
+        if dim % size:
+            return None
+        return avail if len(avail) > 1 else avail[0]
+
+    resolved = P(*(ok(e, d) for e, d in zip(spec, x.shape)))
+    return jax.lax.with_sharding_constraint(x, resolved)
+
+
+def dp_spec_names() -> tuple:
+    """The DP axis group for in-model constraints."""
+    return ("pod", "data")

@@ -1,0 +1,114 @@
+"""TNN column + STDP: WTA semantics and unsupervised clustering dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding, column, stdp
+
+
+def _cfg(dendrite="pc_compact", k=2, n=8, q=3, thr=8, T=24):
+    return column.ColumnConfig(n_inputs=n, n_neurons=q, threshold=thr,
+                               t_steps=T, dendrite=dendrite, k=k)
+
+
+def test_wta_single_winner():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    w = column.init_column(key, cfg)
+    times = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, 12)
+    out, winner = column.column_forward(w, times, cfg)
+    out = np.asarray(out)
+    if winner >= 0:
+        assert (out < int(coding.NO_SPIKE)).sum() == 1
+        assert out[int(winner)] < int(coding.NO_SPIKE)
+    else:
+        assert (out == int(coding.NO_SPIKE)).all()
+
+
+def test_wta_tie_breaks_to_lowest_index():
+    cfg = _cfg(q=2, thr=2, T=16)
+    w = jnp.full((2, 8), 7.0)                   # identical neurons
+    times = jnp.zeros((8,), jnp.int32)
+    _, winner = column.column_forward(w, times, cfg)
+    assert int(winner) == 0
+
+
+def test_stdp_capture_increases_causal_weights():
+    cfg = stdp.STDPConfig()
+    w = jnp.full((4,), 3.0)
+    in_times = jnp.array([0, 1, coding.NO_SPIKE, 9], jnp.int32)
+    out_time = jnp.int32(5)
+    new = stdp.stdp_update(w, in_times, out_time, cfg)
+    assert float(new[0]) > 3.0          # causal -> capture
+    assert float(new[1]) > 3.0
+    assert float(new[2]) < 3.0          # silent input, output fired -> backoff
+    assert float(new[3]) < 3.0          # anti-causal -> backoff
+
+
+def test_stdp_search_when_no_output():
+    cfg = stdp.STDPConfig()
+    w = jnp.full((2,), 3.0)
+    in_times = jnp.array([2, coding.NO_SPIKE], jnp.int32)
+    new = stdp.stdp_update(w, in_times, coding.NO_SPIKE, cfg)
+    assert float(new[0]) > 3.0          # search raises spiking synapse
+    assert float(new[1]) == 3.0         # nothing happened on this line
+
+
+def test_stdp_weights_stay_in_range():
+    cfg = stdp.STDPConfig(w_max=7)
+    key = jax.random.PRNGKey(0)
+    w = jnp.array([0.0, 7.0, 3.5, 6.9])
+    for i in range(20):
+        in_times = jax.random.randint(jax.random.PRNGKey(i), (4,), 0, 10)
+        w = stdp.stdp_update(w, in_times, jnp.int32(5), cfg,
+                             key=jax.random.PRNGKey(100 + i))
+        assert float(w.min()) >= 0.0 and float(w.max()) <= 7.0
+
+
+def _two_cluster_volleys(key, m, n=16, t_max=16, active=4):
+    """Sparse synthetic patterns (25% line activity, within the paper's
+    sparsity motivation): class 0 lights lines [0, active) early, class 1
+    lights [n/2, n/2+active). Returns (volleys, labels)."""
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.bernoulli(k1, 0.5, (m,)).astype(jnp.int32)
+    t = jnp.full((m, n), 40)
+    jit = jax.random.randint(k2, (m, n), 0, 3)
+    t = t.at[:, :active].set(
+        jnp.where(labels[:, None] == 0, jit[:, :active], 40))
+    t = t.at[:, n // 2:n // 2 + active].set(
+        jnp.where(labels[:, None] == 1, jit[:, active:2 * active], 40))
+    t = t.astype(jnp.int32)
+    return jnp.where(t >= t_max, coding.NO_SPIKE, t), labels
+
+
+@pytest.mark.parametrize("dendrite,thr", [("pc_compact", 18),
+                                          ("catwalk", 12)])
+def test_column_learns_two_clusters(dendrite, thr):
+    """Online STDP reaches full clustering purity; the Catwalk dendrite
+    (k=2, 4 simultaneously-active lines => per-tick clipping!) clusters
+    just as well — the accuracy robustness the paper conjectures in §III.
+    Thresholds are dendrite-scaled since Catwalk's potential ramps at
+    <= k/tick."""
+    scfg = stdp.STDPConfig(mu_capture=1.0, mu_backoff=1.0, mu_search=0.5)
+    cfg = column.ColumnConfig(n_inputs=16, n_neurons=2, threshold=thr,
+                              t_steps=16, dendrite=dendrite, k=2, stdp=scfg)
+    key = jax.random.PRNGKey(42)
+    volleys, labels = _two_cluster_volleys(jax.random.PRNGKey(7), 400)
+    w0 = column.init_column(key, cfg)
+    w, winners = column.train_column(w0, volleys, cfg)
+    # score on the trailing half (post-convergence)
+    purity = column.cluster_purity(winners[200:], labels[200:], 2, 2)
+    assert float(purity) > 0.95, f"{dendrite} purity {float(purity)}"
+    # weights specialize: each neuron's top-weight lines match one class
+    w = np.asarray(w)
+    assert {int(np.argmax(w[0]) // 8), int(np.argmax(w[1]) // 8)} == {0, 1}
+
+
+def test_cluster_purity_bounds():
+    winners = jnp.array([0, 0, 1, 1, -1])
+    labels = jnp.array([0, 0, 1, 1, 0])
+    p = column.cluster_purity(winners, labels, 2, 2)
+    assert 0.0 <= float(p) <= 1.0
+    assert float(p) == pytest.approx(0.8)

@@ -1,0 +1,116 @@
+"""Per-arch smoke tests (reduced same-family configs, CPU):
+1 forward/train step, shape + NaN checks, and decode==forward consistency.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import transformer as T
+
+
+def _inputs(cfg, key, b=2, s=16):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["patches"] = jax.random.normal(
+            key, (b, cfg.frontend.n_tokens, cfg.frontend.d_embed))
+    if cfg.family == "audio":
+        kw["frames"] = jax.random.normal(
+            key, (b, cfg.encdec.encoder_seq, cfg.frontend.d_embed))
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    toks, kw = _inputs(cfg, key)
+    logits, aux = jax.jit(lambda p, t: T.forward(p, cfg, t, **kw))(
+        params, toks)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    assert float(aux) >= 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_reduces_loss(arch):
+    """One SGD step on repeated batch lowers CE loss (gradient sanity)."""
+    from repro.models import layers as L
+    cfg = get_config(arch).smoke()
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    toks, kw = _inputs(cfg, key)
+    labels = jnp.roll(toks, -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = T.forward(p, cfg, toks, **kw)
+        return L.cross_entropy(logits, labels) + aux
+
+    loss0, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    params2 = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - 0.1 * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)
+    loss1 = jax.jit(loss_fn)(params2)
+    assert float(loss1) < float(loss0), (arch, float(loss0), float(loss1))
+    assert not any(bool(jnp.isnan(g.astype(jnp.float32)).any())
+                   for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "deepseek-v2-lite-16b",
+                                  "mamba2-780m", "zamba2-1.2b",
+                                  "seamless-m4t-medium", "arctic-480b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token cached decode reproduces the full-sequence forward
+    logits — the serving-path correctness contract (covers GQA, MLA, SSD
+    recurrence, hybrid shared-block, and cross-attention caches)."""
+    cfg = get_config(arch).smoke()
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(key, cfg)
+    b, s = 2, 10
+    toks, kw = _inputs(cfg, key, b, s)
+    # full forward (no patch prefix for decode comparison -> skip vlm here)
+    full_logits, _ = jax.jit(lambda p, t: T.forward(p, cfg, t, **kw))(
+        params, toks)
+
+    state = T.init_serve_state(params, cfg, b, 32, **(
+        {"frames": kw["frames"]} if "frames" in kw else {}))
+    step = jax.jit(lambda p, st, t: T.decode_step(p, cfg, st, t))
+    outs = []
+    for i in range(s):
+        lg, state = step(params, state, toks[:, i:i + 1])
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32), atol=0.06, rtol=0.05)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_positive_and_moe_active_smaller(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    assert n > 0
+    if cfg.moe is not None:
+        assert cfg.active_param_count() < n
+
+
+def test_full_config_param_counts_match_names():
+    """Analytic parameter counts land near the names' billions."""
+    expect = {"glm4-9b": (8, 11), "llama3.2-3b": (2.5, 4.5),
+              "internlm2-1.8b": (1.5, 2.3), "stablelm-3b": (2, 4),
+              "phi-3-vision-4.2b": (3.3, 5), "arctic-480b": (430, 520),
+              "deepseek-v2-lite-16b": (13, 18), "zamba2-1.2b": (1.0, 1.6),
+              "seamless-m4t-medium": (0.7, 1.3), "mamba2-780m": (0.6, 1.0)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_shapes_table():
+    assert SHAPES_BY_NAME["train_4k"].global_batch == 256
+    assert SHAPES_BY_NAME["long_500k"].seq_len == 524288

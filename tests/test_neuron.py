@@ -1,0 +1,115 @@
+"""SRM0-RNL neuron variants: scan sim vs closed forms; Catwalk equivalence
+under the sparsity condition; clipping semantics beyond it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding, neuron
+
+
+def _mk(times, weights, dendrite="pc_compact", k=2, threshold=6, T=32,
+        gate_level=False):
+    cfg = neuron.NeuronConfig(n_inputs=len(times), threshold=threshold,
+                              t_steps=T, dendrite=dendrite, k=k,
+                              gate_level=gate_level)
+    return neuron.simulate_neuron(jnp.array(times, jnp.int32),
+                                  jnp.array(weights, jnp.int32), cfg), cfg
+
+
+def test_pc_neuron_matches_closed_form():
+    key = jax.random.PRNGKey(0)
+    times = jax.random.randint(key, (16, 8), 0, 24)
+    weights = jnp.array([1, 2, 3, 4, 5, 6, 7, 2], jnp.int32)
+    cfg = neuron.NeuronConfig(8, threshold=12, t_steps=32,
+                              dendrite="pc_compact")
+    out = neuron.simulate_neuron(times, weights, cfg)
+    cf = neuron.fire_time_closed_form(times, weights, 12, 32)
+    np.testing.assert_array_equal(np.asarray(out.fire_time), np.asarray(cf))
+
+
+def test_catwalk_scan_matches_closed_form():
+    key = jax.random.PRNGKey(1)
+    times = jax.random.randint(key, (16, 8), 0, 24)
+    weights = jnp.full((8,), 3, jnp.int32)
+    cfg = neuron.NeuronConfig(8, threshold=5, t_steps=32, dendrite="catwalk",
+                              k=2)
+    out = neuron.simulate_neuron(times, weights, cfg)
+    cf = neuron.fire_time_catwalk_closed_form(times, weights, 5, 32, 2)
+    np.testing.assert_array_equal(np.asarray(out.fire_time), np.asarray(cf))
+
+
+def test_catwalk_bit_exact_when_sparse():
+    """<= k active lines at every tick -> Catwalk == full PC exactly
+    (potential trace AND fire time). This is the paper's §III condition."""
+    # two spiking lines only (others silent) with k=2
+    times = jnp.array([[1, 5, coding.NO_SPIKE, coding.NO_SPIKE,
+                        coding.NO_SPIKE, coding.NO_SPIKE, coding.NO_SPIKE,
+                        coding.NO_SPIKE]], jnp.int32)
+    weights = jnp.array([4, 4, 4, 4, 4, 4, 4, 4], jnp.int32)
+    pc, _ = _mk(times[0], weights, "pc_compact", threshold=7, T=24)
+    cw, _ = _mk(times[0], weights, "catwalk", k=2, threshold=7, T=24)
+    np.testing.assert_array_equal(np.asarray(pc.potential),
+                                  np.asarray(cw.potential))
+    np.testing.assert_array_equal(np.asarray(pc.fire_time),
+                                  np.asarray(cw.fire_time))
+    assert int(cw.clip_events[()]) == 0
+
+
+def test_catwalk_clips_when_dense():
+    """More than k simultaneous ramps -> the k-wire dendrite undercounts
+    (clip), and clip_events reports the violated ticks."""
+    times = jnp.zeros((4,), jnp.int32)           # all four spike at t=0
+    weights = jnp.full((4,), 4, jnp.int32)
+    pc, _ = _mk(times, weights, "pc_compact", threshold=100, T=8)
+    cw, _ = _mk(times, weights, "catwalk", k=2, threshold=100, T=8)
+    # PC potential ramps at 4/tick, Catwalk at 2/tick while ramps active
+    assert int(pc.potential[3]) == 16
+    assert int(cw.potential[3]) == 8
+    assert int(cw.clip_events[()]) == 4          # 4 ticks with pop > 2
+
+
+def test_gate_level_equals_fast_path():
+    key = jax.random.PRNGKey(2)
+    times = jax.random.randint(key, (6, 8), 0, 20)
+    weights = jnp.array([2, 1, 3, 2, 4, 1, 2, 3], jnp.int32)
+    for dendrite in ["catwalk", "sorting_pc"]:
+        cfg_g = neuron.NeuronConfig(8, 6, 24, dendrite, k=2, gate_level=True)
+        cfg_f = neuron.NeuronConfig(8, 6, 24, dendrite, k=2, gate_level=False)
+        og = neuron.simulate_neuron(times, weights, cfg_g)
+        of = neuron.simulate_neuron(times, weights, cfg_f)
+        np.testing.assert_array_equal(np.asarray(og.potential),
+                                      np.asarray(of.potential))
+        np.testing.assert_array_equal(np.asarray(og.fire_time),
+                                      np.asarray(of.fire_time))
+
+
+def test_axon_pulse_is_8_ticks():
+    times = jnp.zeros((2,), jnp.int32)
+    weights = jnp.full((2,), 8, jnp.int32)
+    out, cfg = _mk(times, weights, "pc_compact", threshold=4, T=32)
+    fire = int(out.fire_time[()])
+    wave = np.asarray(out.axon_wave)
+    assert wave.sum() == neuron.AXON_PULSE_TICKS
+    assert wave[fire] and not wave[fire - 1]
+
+
+def test_silent_neuron_never_fires():
+    times = jnp.full((8,), coding.NO_SPIKE, jnp.int32)
+    weights = jnp.full((8,), 7, jnp.int32)
+    out, _ = _mk(times, weights, threshold=1, T=16)
+    assert int(out.fire_time[()]) == int(coding.NO_SPIKE)
+    assert not np.asarray(out.axon_wave).any()
+
+
+def test_threshold_monotonicity():
+    """Higher threshold can only delay (or silence) the spike."""
+    key = jax.random.PRNGKey(3)
+    times = jax.random.randint(key, (8,), 0, 10)
+    weights = jnp.full((8,), 3, jnp.int32)
+    prev = -1
+    for thr in [1, 4, 8, 16, 32]:
+        ft = int(neuron.fire_time_closed_form(times, weights, thr, 64)[()])
+        assert ft >= prev
+        prev = ft

@@ -1,0 +1,102 @@
+"""Roofline machinery: HLO cost parser (trip counts, fusion bytes, DUS)
+and term computation."""
+
+import pytest
+
+from repro.roofline import analysis as R
+from repro.roofline import hlo_cost as HC
+
+# minimal synthetic HLO exercising: dot flops, while trip_count scaling,
+# fusion-internal byte exclusion, DUS update-size accounting, collectives
+SYNTH_HLO = """
+%fused_computation (param_0: f32[8,8], param_1.1: f32[8,8]) -> f32[8,8] {
+  %param_0 = f32[8,8]{1,0} parameter(0)
+  %param_1.1 = f32[8,8]{1,0} parameter(1)
+  %mul.1 = f32[8,8]{1,0} multiply(%param_0, %param_1.1)
+  ROOT %add.1 = f32[8,8]{1,0} add(%mul.1, %param_0)
+}
+
+%body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %gte0 = s32[] get-tuple-element(%arg), index=0
+  %gte1 = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %dot.1 = f32[8,8]{1,0} dot(%gte1, %gte1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.1 = f32[8,8]{1,0} all-reduce(%dot.1), replica_groups={}
+  %one = s32[] constant(1)
+  %next = s32[] add(%gte0, %one)
+  ROOT %tuple.1 = (s32[], f32[8,8]) tuple(%next, %ar.1)
+}
+
+%cond (arg.1: (s32[], f32[8,8])) -> pred[] {
+  %arg.1 = (s32[], f32[8,8]) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%arg.1), index=0
+  %ten = s32[] constant(10)
+  ROOT %lt = pred[] compare(%gte.2, %ten), direction=LT
+}
+
+ENTRY %main (p0: f32[8,8], buf: f32[4,8,8]) -> f32[4,8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %buf = f32[4,8,8]{2,1,0} parameter(1)
+  %zero = s32[] constant(0)
+  %tuple.0 = (s32[], f32[8,8]) tuple(%zero, %p0)
+  %while.1 = (s32[], f32[8,8]) while(%tuple.0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %gte.9 = f32[8,8]{1,0} get-tuple-element(%while.1), index=1
+  %fus.1 = f32[8,8]{1,0} fusion(%gte.9, %p0), kind=kLoop, calls=%fused_computation
+  %idx = s32[] constant(0)
+  ROOT %dus.1 = f32[4,8,8]{2,1,0} dynamic-update-slice(%buf, %fus.1, %idx, %idx, %idx)
+}
+"""
+
+
+def test_dot_flops_scaled_by_trip_count():
+    r = HC.analyze(SYNTH_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x10 trips
+    assert r["flops"] == pytest.approx(10 * 1024)
+
+
+def test_bytes_rules():
+    r = HC.analyze(SYNTH_HLO)
+    # materializing ops: dot (x10 trips) + all-reduce (x10) + DUS update
+    # (counts the 8x8 update, NOT the 4x8x8 buffer) + entry params.
+    dot_b = 2 * 64 * 4 * 10
+    ar_b = 2 * 64 * 4 * 10
+    dus_b = 2 * 64 * 4              # update slice, not full buffer
+    params = 64 * 4 + 4 * 64 * 4
+    # fusion internals (mul/add) contribute NOTHING
+    assert r["bytes"] == pytest.approx(dot_b + ar_b + dus_b + params)
+
+
+def test_collectives_scaled():
+    c = HC.collective_bytes_scaled(SYNTH_HLO)
+    assert c["all-reduce"] == pytest.approx(64 * 4 * 10)
+    assert c["all-gather"] == 0
+
+
+def test_roofline_terms_and_dominance():
+    t = R.compute_terms(flops_per_chip=197e12, bytes_per_chip=819e9 / 2,
+                        coll_bytes_per_chip=50e9 * 3, chips=4,
+                        model_flops_global=4 * 197e12 * 0.5)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.collective_s == pytest.approx(3.0)
+    assert t.dominant == "collective"
+    assert t.step_time_s == pytest.approx(3.0)
+    assert t.roofline_fraction == pytest.approx(0.5 / 3.0)
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_kinds():
+    from repro.configs.base import SHAPES_BY_NAME
+    from repro.configs.registry import get_config
+    cfg = get_config("internlm2-1.8b")
+    n = cfg.param_count()
+    train = R.model_flops(cfg, SHAPES_BY_NAME["train_4k"])
+    prefill = R.model_flops(cfg, SHAPES_BY_NAME["prefill_32k"])
+    decode = R.model_flops(cfg, SHAPES_BY_NAME["decode_32k"])
+    assert train == pytest.approx(6 * n * 256 * 4096)
+    assert prefill == pytest.approx(2 * n * 32 * 32768)
+    assert decode == pytest.approx(2 * n * 128)
+    # MoE: active params, not total
+    moe = get_config("arctic-480b")
+    assert R.model_flops(moe, SHAPES_BY_NAME["train_4k"]) < \
+        6 * moe.param_count() * 256 * 4096 / 10

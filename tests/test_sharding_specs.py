@@ -1,0 +1,103 @@
+"""Sharding-rule unit tests: pure PartitionSpec logic (no devices needed —
+a 1x1 mesh exercises the rule structure; divisibility fallbacks are
+checked against a mocked mesh shape)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import specs as SH
+
+
+class FakeMesh:
+    """Just enough Mesh interface for the rule functions."""
+
+    def __init__(self, shape_map):
+        self.shape = dict(shape_map)
+        self.axis_names = tuple(shape_map)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class Leaf:
+    def __init__(self, *shape):
+        self.shape = tuple(shape)
+        self.ndim = len(shape)
+
+
+def _spec(name, *shape, mesh=MESH, **kw):
+    path = tuple(jax.tree_util.GetAttrKey(p) for p in name.split("/"))
+    return SH.param_pspec(path, Leaf(*shape), mesh, **kw)
+
+
+def test_attention_projections_tp():
+    assert _spec("params/layers/attn/wq", 40, 4096, 4096) == \
+        P(None, None, "model")
+    assert _spec("params/layers/attn/wo", 40, 4096, 4096) == \
+        P(None, "model", None)
+
+
+def test_kv_heads_fallback_to_replication():
+    # glm4: 2 KV heads * 128 = 256 cols -> divisible; but 2 heads alone
+    # would not be. A 24-col projection is NOT divisible by 16 -> None.
+    assert _spec("params/layers/attn/wk", 40, 4096, 24) == P(None, None, None)
+
+
+def test_moe_expert_ep_plus_fsdp():
+    s = _spec("params/layers/moe/w_gate", 35, 128, 7168, 4864)
+    assert s == P(None, "model", None, "data")
+    s = _spec("params/layers/moe/w_down", 35, 128, 4864, 7168)
+    assert s == P(None, "model", "data", None)
+
+
+def test_moe_fsdp_spans_pod_axis():
+    s = _spec("params/layers/moe/w_gate", 35, 128, 7168, 4864, mesh=MESH3)
+    assert s == P(None, "model", None, ("pod", "data"))
+
+
+def test_optimizer_state_inherits_param_layout():
+    a = _spec("params/layers/mlp/w_gate", 24, 2048, 8192)
+    b = _spec("opt/m/layers/mlp/w_gate", 24, 2048, 8192)
+    assert a == b == P(None, None, "model")
+
+
+def test_embed_rules():
+    assert _spec("params/embed", 151552, 4096) == P("model", None)
+    assert _spec("params/embed", 151552, 4096, replicate_embed=True) == \
+        P(None, None)
+    # odd vocab not divisible by 16 -> replicated
+    assert _spec("params/embed", 92545, 4096) == P(None, None)
+
+
+def test_norms_replicated():
+    assert _spec("params/layers/norm1", 24, 4096) == P(None, None)
+    assert _spec("params/final_norm", 4096) == P(None)
+
+
+def test_batch_pspec_fallbacks():
+    assert SH.batch_pspec(MESH3, 256, 1) == P(("pod", "data"), None)
+    assert SH.batch_pspec(MESH3, 1, 1) == P(None, None)     # long_500k
+    assert SH.batch_pspec(MESH, 256, 1, over_model=True) == \
+        P(("data", "model"), None)
+    # 256 not divisible by 512 -> falls back to (pod, data)
+    assert SH.batch_pspec(MESH3, 256, 1, over_model=True) == \
+        P(("pod", "data"), None)
+
+
+def test_fit_prefix_fallback():
+    assert SH._fit(MESH3, 32, ("pod", "data", "model")) == ("pod", "data")
+    assert SH._fit(MESH3, 2, ("pod", "data")) == "pod"
+    assert SH._fit(MESH3, 3, ("pod", "data")) is None
+
+
+def test_cache_pspec_kv_heads():
+    path = (jax.tree_util.GetAttrKey("layer_caches"),
+            jax.tree_util.GetAttrKey("k"))
+    s = SH.cache_pspec(path, Leaf(40, 128, 32768, 16, 128), MESH)
+    assert s == P(None, "data", None, "model", None)
+    # 2 KV heads don't divide 16 -> replicated head axis
+    s = SH.cache_pspec(path, Leaf(40, 128, 32768, 2, 128), MESH)
+    assert s == P(None, "data", None, None, None)

@@ -1,0 +1,56 @@
+"""Sorting-network generators: 0-1-principle validity + known sizes."""
+
+import pytest
+
+from repro.core import sorting_networks as sn
+
+
+@pytest.mark.parametrize("kind", ["bitonic", "odd_even", "optimal"])
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_networks_sort_exhaustive(kind, n):
+    net = sn.get_network(kind, n)
+    assert sn.check_sorting_network(net, n, exhaustive_limit=16)
+
+
+@pytest.mark.parametrize("kind", ["bitonic", "odd_even"])
+@pytest.mark.parametrize("n", [32, 64])
+def test_networks_sort_randomized(kind, n):
+    net = sn.get_network(kind, n)
+    assert sn.check_sorting_network(net, n)
+
+
+def test_known_sizes():
+    # paper Fig. 5: bitonic-8 has 24 CAS; best-known sizes from ref [2]
+    assert sn.network_size("bitonic", 8) == 24
+    assert sn.network_size("bitonic", 16) == 80
+    assert sn.network_size("optimal", 4) == 5
+    assert sn.network_size("optimal", 8) == 19
+    assert sn.network_size("optimal", 16) == 60   # Green's construction
+    # Batcher fallback sizes for n where best-known lists are unavailable
+    assert sn.network_size("optimal", 32) == 191
+    assert sn.network_size("optimal", 64) == 543
+    assert not sn.optimal_is_exact(32)
+    assert sn.optimal_is_exact(16)
+
+
+@pytest.mark.parametrize("n,k", [(4, 2), (8, 2), (8, 4), (16, 2), (16, 4),
+                                 (32, 2), (64, 2)])
+def test_selection_network_selects(n, k):
+    import random
+    rng = random.Random(0)
+    net = sn.selection_network(n, k)
+    for _ in range(200):
+        vals = [rng.randint(0, 50) for _ in range(n)]
+        out = sn.apply_network(vals, net)
+        assert out[n - k:] == sorted(vals)[n - k:]
+
+
+def test_selection_sizes_match_recurrence():
+    # S2(n) = 2*S2(n/2) + 3, S2(2) = 1
+    sizes = {n: len(sn.selection_network(n, 2)) for n in [4, 8, 16, 32, 64]}
+    assert sizes == {4: 5, 8: 13, 16: 29, 32: 61, 64: 125}
+
+
+def test_network_depth_monotone():
+    assert sn.network_depth(sn.get_network("bitonic", 8)) == 6
+    assert sn.network_depth(sn.get_network("optimal", 8)) >= 6

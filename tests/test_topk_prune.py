@@ -1,0 +1,93 @@
+"""Algorithm 1 (top-k pruning): functional correctness + half-CAS safety."""
+
+import itertools
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sorting_networks as sn
+from repro.core.topk_prune import apply_topk, prune_topk, topk_network
+
+
+@pytest.mark.parametrize("kind", ["bitonic", "optimal", "odd_even"])
+@pytest.mark.parametrize("n,k", [(4, 1), (4, 2), (8, 2), (8, 4), (16, 2),
+                                 (16, 8)])
+def test_pruned_network_computes_topk(kind, n, k):
+    rng = random.Random(0)
+    net = topk_network(kind, n, k)
+    for _ in range(300):
+        vals = [rng.randint(0, 20) for _ in range(n)]
+        assert apply_topk(vals, net) == sorted(vals)[n - k:]
+
+
+def test_pruned_is_subset_and_ordered():
+    for kind in ["bitonic", "optimal"]:
+        src = list(sn.get_network(kind, 16))
+        net = topk_network(kind, 16, 2)
+        # units appear in the same relative order as in the source sorter
+        it = iter(src)
+        for u in net.units:
+            for cand in it:
+                if cand == u:
+                    break
+            else:
+                pytest.fail(f"unit {u} not in source order")
+
+
+def test_fig5_counts():
+    """Our faithful Algorithm-1 counts for the paper's Fig. 5 settings."""
+    b2 = topk_network("bitonic", 8, 2)
+    b4 = topk_network("bitonic", 8, 4)
+    o2 = topk_network("optimal", 8, 2)
+    o4 = topk_network("optimal", 8, 4)
+    assert b2.fig5_xyz() == (24, 19, 6)
+    assert b4.fig5_xyz() == (24, 20, 4)
+    assert o2.fig5_xyz() == (19, 13, 6)
+    assert o4.fig5_xyz() == (19, 19, 4)
+    # paper's observation 3: higher k -> higher cost (within one sorter)
+    assert b4.gate_count > b2.gate_count
+    assert o4.gate_count > o2.gate_count
+
+
+def test_k_equals_n_is_identity():
+    net = topk_network("optimal", 8, 8)
+    assert net.num_units == 19
+    assert net.num_half == 0
+
+
+def test_pruned_optimal_equals_selection_structure_size():
+    # pruned best-known sorters coincide with the direct selection network
+    # where exact lists exist (DESIGN.md §3.5)
+    assert topk_network("optimal", 8, 2).num_units == 13
+    assert topk_network("optimal", 16, 2).num_units == 29
+    assert topk_network("selection", 16, 2).num_units == 29
+    assert topk_network("selection", 64, 2).num_units == 125
+    assert topk_network("auto", 16, 2).source_kind == "optimal"
+    assert topk_network("auto", 64, 2).source_kind == "selection"
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=8, max_size=8),
+       st.sampled_from([1, 2, 4]))
+def test_property_topk_any_multiset(vals, k):
+    net = topk_network("optimal", 8, k)
+    assert apply_topk(vals, net) == sorted(vals)[8 - k:]
+
+
+def test_exhaustive_bits_8():
+    """0-1 principle over all 256 Boolean inputs: bottom-k is the clipped
+    thermometer (the formal Catwalk correctness condition)."""
+    net = topk_network("optimal", 8, 2)
+    for bits in itertools.product((0, 1), repeat=8):
+        out = apply_topk(list(bits), net)
+        pc = sum(bits)
+        assert sum(out) == min(pc, 2)
+        assert out == sorted(out)  # thermometer: 1s at the bottom
+
+
+def test_prune_rejects_bad_k():
+    with pytest.raises(ValueError):
+        prune_topk(sn.get_network("optimal", 8), 8, 0)
+    with pytest.raises(ValueError):
+        prune_topk(sn.get_network("optimal", 8), 8, 9)

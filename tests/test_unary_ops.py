@@ -1,0 +1,97 @@
+"""Gate-level unary evaluation in JAX vs oracles; fast-path equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding, sorting_networks as sn, unary_ops
+from repro.core.topk_prune import topk_network
+
+
+def _rand_bits(key, shape):
+    return jax.random.bernoulli(key, 0.3, shape)
+
+
+@pytest.mark.parametrize("kind,n", [("bitonic", 8), ("optimal", 8),
+                                    ("optimal", 16), ("odd_even", 16)])
+def test_sort_bits_is_thermometer(kind, n):
+    key = jax.random.PRNGKey(0)
+    bits = _rand_bits(key, (64, n))
+    out = unary_ops.sort_bits(bits, sn.get_network(kind, n))
+    want = coding.popcount_thermometer(bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("kind", ["bitonic", "optimal", "selection"])
+@pytest.mark.parametrize("n,k", [(8, 2), (16, 2), (16, 4)])
+def test_topk_bits_gate_level_vs_fast(kind, n, k):
+    net = topk_network(kind, n, k)
+    key = jax.random.PRNGKey(1)
+    bits = _rand_bits(key, (128, n))
+    gate = unary_ops.topk_bits(bits, net)
+    fast = unary_ops.topk_bits_fast(bits, k)
+    np.testing.assert_array_equal(np.asarray(gate), np.asarray(fast))
+
+
+@pytest.mark.parametrize("n,k", [(8, 2), (16, 2)])
+def test_half_unit_removal_is_safe(n, k):
+    """Dropping the dashed gates (Fig. 4b) must not change the selected
+    wires — exhaustive over all 2^n inputs for n=8, random for 16."""
+    net = topk_network("optimal", n, k)
+    if n == 8:
+        import itertools
+        bits = jnp.array(list(itertools.product((0, 1), repeat=n)), bool)
+    else:
+        bits = _rand_bits(jax.random.PRNGKey(2), (512, n))
+    full = unary_ops.topk_bits(bits, net)
+    masked = unary_ops.half_unit_masked(bits, net)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(masked))
+
+
+def test_topk_count_equals_clipped_popcount():
+    net = topk_network("optimal", 16, 2)
+    bits = _rand_bits(jax.random.PRNGKey(3), (256, 16))
+    cnt = unary_ops.topk_count(bits, net)
+    pc = jnp.sum(bits.astype(jnp.int32), axis=-1)
+    np.testing.assert_array_equal(np.asarray(cnt),
+                                  np.asarray(jnp.minimum(pc, 2)))
+
+
+def test_waves_time_axis_folds():
+    """Applying the network on (T, n) waves == per-tick application."""
+    net = sn.get_network("optimal", 8)
+    times = jnp.array([0, 3, coding.NO_SPIKE, 5, 1, coding.NO_SPIKE, 2, 7])
+    waves = coding.times_to_monotone_wave(times, 10)   # (10, 8)
+    out = unary_ops.apply_cas_waves(waves, net)
+    per_tick = jnp.stack([unary_ops.apply_cas_bits(waves[t], net)
+                          for t in range(10)])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(per_tick))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**16 - 1))
+def test_property_thermometer_16(x):
+    bits = jnp.array([(x >> i) & 1 for i in range(16)], bool)[None]
+    out = unary_ops.sort_bits(bits, sn.get_network("optimal", 16))
+    want = coding.popcount_thermometer(bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_rnl_response_equation1():
+    w = jnp.int32(4)
+    ts = jnp.arange(-2, 8)
+    got = coding.rnl_response(w, ts)
+    want = jnp.array([0, 0, 1, 2, 3, 4, 4, 4, 4, 4], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rnl_bits_cumsum_matches_response():
+    times = jnp.array([2, 0, coding.NO_SPIKE, 5])
+    weights = jnp.array([3, 1, 4, 2])
+    bits = coding.rnl_response_bits(times, weights, 12)
+    pot = jnp.cumsum(bits.astype(jnp.int32), axis=0)
+    t = jnp.arange(12, dtype=jnp.int32)[:, None]
+    want = coding.rnl_response(weights[None, :], t - times[None, :])
+    np.testing.assert_array_equal(np.asarray(pot), np.asarray(want))
