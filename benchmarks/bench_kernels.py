@@ -7,10 +7,13 @@ dry-run roofline. Oracle (jnp) timings on CPU are the honest baseline.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro.core import coding, layer, unary_ops
 from repro.core.topk_prune import topk_network
 from repro.kernels import ops, ref
 
@@ -21,7 +24,6 @@ def main() -> None:
     # unary top-k relocation (jnp fast path vs gate-level oracle)
     net = topk_network("auto", 64, 2)
     bits = jax.random.bernoulli(key, 0.05, (512, 64))
-    from repro.core import unary_ops
     f_fast = jax.jit(lambda b: unary_ops.topk_bits_fast(b, 2))
     f_gate = jax.jit(lambda b: ref.unary_topk_relocate(b, net))
     emit("kernels/unary_topk_fastpath_512x64", time_fn(f_fast, bits),
@@ -35,6 +37,22 @@ def main() -> None:
     f_rnl = jax.jit(lambda t: ref.rnl_fire_times(t, w, t_steps=64,
                                                  threshold=9, k=2))
     emit("kernels/rnl_ref_64x16x64", time_fn(f_rnl, times), "closed_form")
+
+    # batched multi-column TNN layer forward: closed-form vs Pallas backend
+    lcfg = layer.TNNLayer(n_columns=4, rf_size=16, n_neurons=16,
+                          threshold=12, t_steps=32, dendrite="catwalk", k=2,
+                          backend="closed_form")
+    w_layer = layer.init_layer(key, lcfg)
+    bsz = 64
+    raw = jax.random.randint(key, (bsz, lcfg.n_inputs), 0, 48)
+    volleys = jnp.where(raw >= 32, coding.NO_SPIKE, raw)
+    for backend in ("closed_form", "pallas"):
+        cfg_b = dataclasses.replace(lcfg, backend=backend)
+        f_layer = jax.jit(lambda v, c=cfg_b: layer.layer_forward(
+            w_layer, v, c)[0])
+        us = time_fn(f_layer, volleys, iters=5)
+        emit(f"kernels/tnn_layer_fwd_{bsz}x4x16_{backend}", us,
+             f"{bsz * 1e6 / us:.0f}_volleys_per_s")
 
     # ssd scan: chunked vs token scan
     ks = jax.random.split(key, 4)

@@ -3,9 +3,14 @@ unsupervised clustering with a TNN column (Smith [12,13], the workload the
 Catwalk neuron is built for).
 
 Generates a stream of temporal-coded spike volleys from 3 latent classes,
-trains a 16-input x 3-neuron column online with STDP + WTA — once with the
-exact full-PC dendrite and once with Catwalk (k=2) — and reports
-clustering purity over time plus the silicon cost of each column.
+trains a 16-input x 3-neuron TNN layer online with STDP + WTA — once with
+the exact full-PC dendrite and once with Catwalk (k=2) — and reports
+clustering purity over time plus the silicon cost of each column. The
+training path runs through the batched multi-column layer subsystem
+(:mod:`repro.core.layer`), which at one column / batch-size-1 reproduces
+the classic per-volley column rule exactly; a final section stacks two
+layers into a :mod:`repro.core.network` TNNNetwork to show volleys flowing
+through a multi-layer TNN.
 
 Run:  PYTHONPATH=src python examples/tnn_clustering.py [--volleys 600]
 """
@@ -16,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coding, column, hwcost, stdp
+from repro.core import coding, column, hwcost, layer, network, stdp
 
 
 def make_stream(key, m, n=16, t_max=16, active=4, classes=3):
@@ -43,11 +48,12 @@ def main():
     model = hwcost.calibrate()
 
     for dendrite, thr, k in (("pc_compact", 18, 2), ("catwalk", 12, 2)):
-        cfg = column.ColumnConfig(n_inputs=16, n_neurons=3, threshold=thr,
-                                  t_steps=16, dendrite=dendrite, k=k,
-                                  stdp=scfg)
-        w0 = column.init_column(key, cfg)
-        w, winners = column.train_column(w0, volleys, cfg)
+        cfg = layer.TNNLayer(n_columns=1, rf_size=16, n_neurons=3,
+                             threshold=thr, t_steps=16, dendrite=dendrite,
+                             k=k, stdp=scfg)
+        w0 = layer.init_layer(key, cfg)
+        w, winners = layer.train_layer(w0, volleys, cfg, batch_size=1)
+        winners = winners[:, 0]           # single column
         m = args.volleys
         for lo, hi in ((0, m // 3), (m // 3, 2 * m // 3),
                        (2 * m // 3, m)):
@@ -59,7 +65,25 @@ def main():
               f"{cost['total_uw']:.1f} uW x 3 neurons\n")
 
     print("Catwalk clusters as well as the exact dendrite at a fraction "
-          "of the silicon cost — the paper's §III conjecture, validated.")
+          "of the silicon cost — the paper's §III conjecture, validated.\n")
+
+    # ------------------------------------------------------------------
+    # Multi-layer TNN: two stacked Catwalk layers, trained greedily with
+    # minibatch STDP (B=8). Layer 1's three WTA output lines feed layer 2.
+    # ------------------------------------------------------------------
+    l1 = layer.TNNLayer(n_columns=1, rf_size=16, n_neurons=3, threshold=12,
+                        t_steps=16, dendrite="catwalk", k=2, stdp=scfg)
+    l2 = layer.TNNLayer(n_columns=1, rf_size=3, n_neurons=3, threshold=2,
+                        t_steps=16, dendrite="catwalk", k=2, stdp=scfg)
+    net = network.make_network([l1, l2])
+    m = args.volleys - args.volleys % 8
+    params = network.init_network(key, net)
+    params, winners_per_layer = network.train_network(
+        params, volleys[:m], net, batch_size=8)
+    p2 = column.cluster_purity(winners_per_layer[-1][m // 2:, 0],
+                               labels[m // 2:m], 3, 3)
+    print(f"2-layer TNNNetwork (minibatch B=8) layer-2 purity "
+          f"(trailing half): {float(p2):.3f}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,11 @@ the input volleys.
 
 The column is dendrite-agnostic: any :class:`repro.core.neuron.NeuronConfig`
 variant (full PC or Catwalk) plugs in, which is how the accuracy-vs-k
-clipping study (EXPERIMENTS §Beyond-paper) is run.
+clipping study (EXPERIMENTS §Beyond-paper) is run. The forward pass is a
+single :func:`repro.core.neuron.fire_times_bank` dispatch, so the same code
+runs on the closed form, the tick-accurate scan, or the fused Pallas kernel
+(``ColumnConfig.backend``). For many columns / batched volleys use
+:mod:`repro.core.layer`, which builds on the same primitives.
 """
 
 from __future__ import annotations
@@ -35,6 +39,9 @@ class ColumnConfig:
     k: int = 2
     w_max: int = 7
     stdp: stdp.STDPConfig = dataclasses.field(default_factory=stdp.STDPConfig)
+    #: neuron-bank engine (see repro.core.neuron.fire_times_bank); "auto"
+    #: = Pallas kernel on TPU, vectorized closed form elsewhere.
+    backend: neuron.Backend = "auto"
 
     def neuron_config(self) -> neuron.NeuronConfig:
         return neuron.NeuronConfig(
@@ -61,16 +68,15 @@ def column_forward(weights: jax.Array, in_times: jax.Array,
       (NO_SPIKE for losers); winner () int32 index, -1 if no neuron fired.
     """
     w_int = jnp.round(weights).astype(jnp.int32)
-    if cfg.dendrite in ("sorting_pc", "catwalk"):
-        fire = jax.vmap(
-            lambda wr: neuron.fire_time_catwalk_closed_form(
-                in_times, wr, cfg.threshold, cfg.t_steps, cfg.k))(w_int)
-    else:
-        fire = jax.vmap(
-            lambda wr: neuron.fire_time_closed_form(
-                in_times, wr, cfg.threshold, cfg.t_steps))(w_int)
-    # 1-WTA: earliest fire wins; ties -> lowest index (hardware priority
-    # encoder). argmin on (time, index) lexicographic via scaled key.
+    # One neuron-bank dispatch covers every dendrite kind: sorting_pc
+    # intentionally shares the Catwalk k-clipped fast path (identical
+    # function, different silicon cost) and pc_* take the exact-popcount
+    # path — see repro.core.neuron.clip_k.
+    fire = neuron.fire_times_bank(in_times[None, :], w_int,
+                                  cfg.neuron_config(),
+                                  backend=cfg.backend)[0]
+    # 1-WTA: earliest fire wins; ties -> lowest index, because argmin
+    # returns the first minimal entry (hardware priority encoder).
     any_fire = jnp.any(coding.is_spike(fire))
     winner = jnp.argmin(fire).astype(jnp.int32)  # NO_SPIKE is the max value
     winner = jnp.where(any_fire, winner, -1)

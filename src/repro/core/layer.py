@@ -1,0 +1,211 @@
+"""Batched multi-column TNN layer (DESIGN.md §6).
+
+A :class:`TNNLayer` is C independent columns side by side — the unit of
+computation in layered TNNs (Smith [12, 13]; Nair et al. [7] tile the same
+structure in RTL; Vellaisamy & Shen's SPU framework stacks them into
+sensory-processing pipelines). Per gamma cycle:
+
+  1. The layer receives a batch of B input volleys over ``n_inputs`` lines.
+  2. Each column c reads its *receptive field* — a contiguous window of
+     ``rf_size`` lines starting at ``c * rf_stride`` (stride defaults to
+     the window size, i.e. disjoint tiling; overlap with smaller strides).
+  3. All B x C x Q neurons integrate in one
+     :func:`repro.core.neuron.fire_times_bank` dispatch (closed form, tick
+     scan, or one fused Pallas launch over a (C, batch, neuron) grid).
+  4. 1-WTA lateral inhibition runs vectorized over the (B, C) plane: per
+     column, the earliest-firing neuron keeps its spike (ties -> lowest
+     index, the hardware priority encoder); losers are silenced.
+  5. Minibatch STDP (:func:`repro.core.stdp.stdp_update_column_minibatch`)
+     accumulates per-volley updates across the batch dimension; at B=1 it
+     is bit-identical to the online per-volley rule used by
+     :func:`repro.core.column.column_step`.
+
+Everything is functional (weights in, weights out) and jit/scan friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, neuron, stdp
+
+
+@dataclasses.dataclass(frozen=True)
+class TNNLayer:
+    """Static layer description; weights live in a (C, Q, rf_size) array."""
+
+    n_columns: int
+    rf_size: int
+    n_neurons: int
+    threshold: int
+    t_steps: int
+    dendrite: neuron.DendriteKind = "catwalk"
+    k: int = 2
+    w_max: int = 7
+    #: receptive-field stride between adjacent columns; None = rf_size
+    #: (disjoint windows). rf_stride < rf_size gives overlapping fields.
+    rf_stride: Optional[int] = None
+    backend: neuron.Backend = "auto"
+    stdp: stdp.STDPConfig = dataclasses.field(default_factory=stdp.STDPConfig)
+    #: minibatch STDP reduction: "mean" (default) or "sum".
+    stdp_reduction: str = "mean"
+
+    @property
+    def stride(self) -> int:
+        return self.rf_size if self.rf_stride is None else self.rf_stride
+
+    @property
+    def n_inputs(self) -> int:
+        """Input lines the layer consumes (last window end-aligned)."""
+        return self.stride * (self.n_columns - 1) + self.rf_size
+
+    @property
+    def n_outputs(self) -> int:
+        """Output lines the layer produces (one per neuron, flattened)."""
+        return self.n_columns * self.n_neurons
+
+    def rf_index(self) -> jax.Array:
+        """(C, rf_size) int32 input-line ids per column."""
+        starts = jnp.arange(self.n_columns, dtype=jnp.int32) * self.stride
+        return starts[:, None] + jnp.arange(self.rf_size, dtype=jnp.int32)
+
+    def neuron_config(self) -> neuron.NeuronConfig:
+        return neuron.NeuronConfig(
+            n_inputs=self.rf_size, threshold=self.threshold,
+            t_steps=self.t_steps, dendrite=self.dendrite, k=self.k)
+
+    def column_config(self):
+        """Single-column view (for per-column tooling / equivalence tests)."""
+        from repro.core import column
+        return column.ColumnConfig(
+            n_inputs=self.rf_size, n_neurons=self.n_neurons,
+            threshold=self.threshold, t_steps=self.t_steps,
+            dendrite=self.dendrite, k=self.k, w_max=self.w_max,
+            stdp=self.stdp, backend=self.backend)
+
+
+def init_layer(key: jax.Array, cfg: TNNLayer) -> jax.Array:
+    """Random initial weights (C, Q, rf_size) uniform over [0, w_max]."""
+    return jax.random.uniform(
+        key, (cfg.n_columns, cfg.n_neurons, cfg.rf_size),
+        minval=0.0, maxval=float(cfg.w_max))
+
+
+def _gather_rf(volleys: jax.Array, cfg: TNNLayer) -> jax.Array:
+    """(B, n_inputs) volleys -> (C, B, rf_size) per-column slices."""
+    rf = volleys[:, cfg.rf_index()]           # (B, C, rf)
+    return jnp.swapaxes(rf, 0, 1)             # (C, B, rf)
+
+
+def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Run one gamma cycle for a batch of volleys.
+
+    Args:
+      weights: (C, Q, rf_size) float; rounded to ints (hardware registers).
+      volleys: (B, n_inputs) int32 spike volleys — or (n_inputs,) for one.
+
+    Returns:
+      (out_times, winners): out_times (B, C, Q) int32 post-WTA spike times
+      (NO_SPIKE for losers); winners (B, C) int32 per-column winner index,
+      -1 where no neuron in the column fired. 1-D input gives (C, Q)/(C,).
+    """
+    single = volleys.ndim == 1
+    if single:
+        volleys = volleys[None, :]
+    w_int = jnp.round(weights).astype(jnp.int32)
+    times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
+    fire = neuron.fire_times_bank(times_rf, w_int, cfg.neuron_config(),
+                                  backend=cfg.backend)        # (C, B, Q)
+    fire = jnp.swapaxes(fire, 0, 1)                           # (B, C, Q)
+    # vectorized 1-WTA over the (B, C) plane; argmin's first-minimum rule
+    # is the tie-break-to-lowest-index priority encoder.
+    any_fire = jnp.any(coding.is_spike(fire), axis=-1)        # (B, C)
+    winners = jnp.argmin(fire, axis=-1).astype(jnp.int32)
+    winners = jnp.where(any_fire, winners, -1)
+    lane = jnp.arange(cfg.n_neurons, dtype=jnp.int32)
+    out = jnp.where(lane == winners[..., None], fire, coding.NO_SPIKE)
+    if single:
+        return out[0], winners[0]
+    return out, winners
+
+
+def layer_step(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer,
+               key: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Forward + minibatch STDP. Returns (new_weights, out_times, winners).
+
+    Per-volley STDP deltas are evaluated at the shared pre-step weights and
+    accumulated across the batch (``cfg.stdp_reduction``); each column
+    learns only from its own receptive-field slice and WTA outcome.
+    """
+    if volleys.ndim == 1:
+        volleys = volleys[None, :]
+    out_times, winners = layer_forward(weights, volleys, cfg)
+    times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
+    out_cb = jnp.swapaxes(out_times, 0, 1)                    # (C, B, Q)
+    win_cb = jnp.swapaxes(winners, 0, 1)                      # (C, B)
+    ckeys = (jax.random.split(key, cfg.n_columns)
+             if key is not None else None)
+
+    def one_column(w, in_t, out_t, win, ck):
+        return stdp.stdp_update_column_minibatch(
+            w, in_t, out_t, win, cfg.stdp, ck,
+            reduction=cfg.stdp_reduction)
+
+    if ckeys is None:
+        new_w = jax.vmap(lambda w, t, o, g: one_column(w, t, o, g, None))(
+            weights, times_rf, out_cb, win_cb)
+    else:
+        new_w = jax.vmap(one_column)(weights, times_rf, out_cb, win_cb,
+                                     ckeys)
+    return new_w, out_times, winners
+
+
+def scan_minibatches(step_fn, carry, volleys: jax.Array, batch_size: int,
+                     key: Optional[jax.Array]):
+    """Stream-batching scaffold shared by train_layer / train_network.
+
+    Reshapes a (M, n) volley stream into M // batch_size sequential
+    minibatches (M must be divisible) and lax.scans
+    ``step_fn(carry, batch, key_or_None) -> (carry, ys)`` over them.
+    """
+    m = volleys.shape[0]
+    if m % batch_size != 0:
+        raise ValueError(f"stream length {m} not divisible by "
+                         f"batch_size {batch_size}")
+    steps = m // batch_size
+    batches = volleys.reshape(steps, batch_size, volleys.shape[-1])
+    keys = (jnp.zeros((steps, 2), jnp.uint32) if key is None
+            else jax.random.split(key, steps))
+    use_key = key is not None
+
+    def step(c, xs):
+        batch, sk = xs
+        return step_fn(c, batch, sk if use_key else None)
+
+    return jax.lax.scan(step, carry, (batches, keys))
+
+
+def train_layer(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer,
+                batch_size: int = 1, key: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Train over a stream of volleys (M, n_inputs) via lax.scan.
+
+    The stream is processed as M // batch_size sequential minibatches
+    (M must be divisible); batch_size=1 is the classic online rule.
+
+    Returns (final_weights, winners (M, C)).
+    """
+
+    def step(w, batch, sk):
+        new_w, _, winners = layer_step(w, batch, cfg, sk)
+        return new_w, winners
+
+    final_w, winners = scan_minibatches(step, weights, volleys, batch_size,
+                                        key)
+    return final_w, winners.reshape(volleys.shape[0], cfg.n_columns)

@@ -1,0 +1,128 @@
+"""Multi-layer TNN: a stack of TNNLayers over a stream of volleys
+(DESIGN.md §6.3).
+
+Feedforward TNNs (Smith [13]; Vellaisamy & Shen's SPU design framework)
+compose columns layer by layer: each layer's post-WTA output spikes — at
+most one line hot per column, carrying the winner's fire *time* — form the
+input volley of the next layer. Flattened, layer l emits
+``n_columns * n_neurons`` lines, which must equal layer l+1's ``n_inputs``
+(checked at construction).
+
+Learning is layer-local (greedy): STDP in every layer uses only that
+layer's own input slice and WTA outcome, so one forward sweep trains all
+layers simultaneously — no backward pass exists in a TNN. All functions
+are jit/scan friendly; weights are a tuple of (C, Q, rf) arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import layer as layer_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TNNNetwork:
+    layers: Tuple[layer_mod.TNNLayer, ...]
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("network needs at least one layer")
+        for i in range(1, len(self.layers)):
+            prev, cur = self.layers[i - 1], self.layers[i]
+            if prev.n_outputs != cur.n_inputs:
+                raise ValueError(
+                    f"layer {i - 1} emits {prev.n_outputs} lines but layer "
+                    f"{i} consumes {cur.n_inputs}")
+
+    @property
+    def n_inputs(self) -> int:
+        return self.layers[0].n_inputs
+
+    @property
+    def n_outputs(self) -> int:
+        return self.layers[-1].n_outputs
+
+
+def make_network(layers: Sequence[layer_mod.TNNLayer]) -> TNNNetwork:
+    return TNNNetwork(layers=tuple(layers))
+
+
+def init_network(key: jax.Array, cfg: TNNNetwork) -> Tuple[jax.Array, ...]:
+    keys = jax.random.split(key, len(cfg.layers))
+    return tuple(layer_mod.init_layer(k, lc)
+                 for k, lc in zip(keys, cfg.layers))
+
+
+def network_forward(params: Sequence[jax.Array], volleys: jax.Array,
+                    cfg: TNNNetwork
+                    ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """One gamma cycle through the whole stack.
+
+    Args:
+      params:  per-layer weights, layer l shaped (C_l, Q_l, rf_l).
+      volleys: (B, n_inputs) int32 input spike volleys.
+
+    Returns:
+      (out_times, winners): out_times (B, C_last, Q_last) int32 post-WTA
+      spike times of the last layer; winners — per-layer (B, C_l) winner
+      indices (the network's spike-train activation trace). A 1-D single
+      volley gives (C_last, Q_last) / per-layer (C_l,).
+    """
+    single = volleys.ndim == 1
+    x = volleys[None, :] if single else volleys
+    winners_all = []
+    out = None
+    for w, lc in zip(params, cfg.layers):
+        out, winners = layer_mod.layer_forward(w, x, lc)
+        winners_all.append(winners)
+        x = out.reshape(out.shape[0], lc.n_outputs)   # spike times forward
+    if single:
+        return out[0], tuple(w[0] for w in winners_all)
+    return out, tuple(winners_all)
+
+
+def network_step(params: Sequence[jax.Array], volleys: jax.Array,
+                 cfg: TNNNetwork, key: Optional[jax.Array] = None
+                 ) -> Tuple[Tuple[jax.Array, ...], jax.Array,
+                            Tuple[jax.Array, ...]]:
+    """Forward + layer-local minibatch STDP in every layer.
+
+    Each layer updates from the volley it actually saw this cycle (the
+    previous layer's pre-update output), so a single sweep advances the
+    whole stack. Returns (new_params, last_out_times, per_layer_winners).
+    """
+    keys = (jax.random.split(key, len(cfg.layers))
+            if key is not None else [None] * len(cfg.layers))
+    x = volleys[None, :] if volleys.ndim == 1 else volleys
+    new_params = []
+    winners_all = []
+    out = None
+    for w, lc, lk in zip(params, cfg.layers, keys):
+        new_w, out, winners = layer_mod.layer_step(w, x, lc, lk)
+        new_params.append(new_w)
+        winners_all.append(winners)
+        x = out.reshape(out.shape[0], lc.n_outputs)
+    return tuple(new_params), out, tuple(winners_all)
+
+
+def train_network(params: Sequence[jax.Array], volleys: jax.Array,
+                  cfg: TNNNetwork, batch_size: int = 1,
+                  key: Optional[jax.Array] = None
+                  ) -> Tuple[Tuple[jax.Array, ...], Tuple[jax.Array, ...]]:
+    """Greedy simultaneous training over a stream (M, n_inputs) of volleys.
+
+    Returns (final_params, per_layer winners (M, C_l)).
+    """
+
+    def step(ps, batch, sk):
+        new_ps, _, winners = network_step(ps, batch, cfg, sk)
+        return new_ps, winners
+
+    final, winners = layer_mod.scan_minibatches(step, tuple(params),
+                                                volleys, batch_size, key)
+    return final, tuple(w.reshape(volleys.shape[0], lc.n_columns)
+                        for w, lc in zip(winners, cfg.layers))

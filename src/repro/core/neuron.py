@@ -45,6 +45,8 @@ from repro.core.topk_prune import topk_network
 
 DendriteKind = Literal["pc_conventional", "pc_compact", "sorting_pc", "catwalk"]
 
+Backend = Literal["auto", "scan", "closed_form", "pallas"]
+
 #: Axon output pulse length in ticks (Fig. 4a: 8-cycle pulse counter).
 AXON_PULSE_TICKS = 8
 
@@ -172,3 +174,128 @@ def fire_time_catwalk_closed_form(times: jax.Array, weights: jax.Array,
     any_hit = jnp.any(hit, axis=-1)
     first = jnp.argmax(hit, axis=-1).astype(jnp.int32)
     return jnp.where(any_hit, first, coding.NO_SPIKE)
+
+
+# --------------------------------------------------------------------------
+# Batched neuron-bank API: one signature, four engines (DESIGN.md §2).
+# --------------------------------------------------------------------------
+
+def clip_k(cfg: NeuronConfig) -> Optional[int]:
+    """Per-tick dendrite clip: k for the clipped designs, None for full PC.
+
+    ``sorting_pc`` and ``catwalk`` produce identical *function* (min of the
+    popcount and k each tick); they differ only in silicon cost, so both map
+    to the same clipped evaluation path here.
+    """
+    return cfg.k if cfg.dendrite in ("sorting_pc", "catwalk") else None
+
+
+def pallas_available() -> bool:
+    """Whether the fused Pallas neuron-bank kernel can run here.
+
+    True on a TPU backend (Mosaic lowering) and on CPU via the Pallas
+    interpreter (bit-accurate, slow — fine for tests, wrong choice for
+    training loops, hence the ``auto`` policy below).
+    """
+    try:
+        from repro.kernels import rnl_neuron  # noqa: F401
+        return True
+    except Exception:  # pragma: no cover - pallas/toolchain missing
+        return False
+
+
+def resolve_backend(backend: Backend) -> str:
+    """``auto`` -> "pallas" when the kernel path is the fast one (TPU),
+    else the vectorized closed form; explicit names pass through."""
+    if backend != "auto":
+        return backend
+    if jax.default_backend() == "tpu" and pallas_available():
+        return "pallas"
+    return "closed_form"
+
+
+def _bank_shapes(times: jax.Array, weights: jax.Array):
+    """Normalize to (times (..., B, n), weights (..., Q, n)) with matching
+    leading (column) axes; 1-D inputs are promoted to singleton banks."""
+    times = jnp.asarray(times)
+    weights = jnp.asarray(weights)
+    if times.ndim == 1:
+        times = times[None, :]
+    if weights.ndim == 1:
+        weights = weights[None, :]
+    if times.ndim != weights.ndim:
+        raise ValueError(f"times/weights rank mismatch: {times.shape} vs "
+                         f"{weights.shape}")
+    if times.shape[-1] != weights.shape[-1]:
+        raise ValueError(f"input-line count mismatch: {times.shape} vs "
+                         f"{weights.shape}")
+    if times.shape[:-2] != weights.shape[:-2]:
+        raise ValueError(f"leading (column) axes mismatch: {times.shape} vs "
+                         f"{weights.shape}")
+    return times.astype(jnp.int32), weights.astype(jnp.int32)
+
+
+def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
+                    backend: Backend = "auto") -> jax.Array:
+    """Fire times of a neuron bank: every volley through every neuron.
+
+    This is the single entry point the column/layer stack builds on; all
+    engines are bit-exact on the fire times (int32 arithmetic throughout):
+
+      * ``"scan"``        — cycle-accurate :func:`simulate_neuron` tick scan
+        (the hardware mirror; honors ``cfg.gate_level``).
+      * ``"closed_form"`` — vectorized time-parallel evaluation
+        (:func:`fire_time_closed_form` / :func:`fire_time_catwalk_closed_form`).
+      * ``"pallas"``      — fused TPU kernel
+        (:func:`repro.kernels.rnl_neuron.rnl_fire_times`), one launch per
+        bank, or per column stack for 3-D inputs.
+      * ``"auto"``        — pallas on TPU, else the closed form.
+
+    Args:
+      times:   (B, n) int32 spike volleys — or (C, B, n) for C independent
+        columns, or (n,) for a single volley.
+      weights: (Q, n) int32/float weights (rounded ints expected) — or
+        (C, Q, n) matching a 3-D ``times``, or (n,) for a single neuron.
+      cfg: neuron variant; ``pc_*`` use the exact popcount dendrite,
+        ``sorting_pc``/``catwalk`` the k-clipped dendrite (see
+        :func:`clip_k`).
+      backend: engine selection, see above.
+
+    Returns:
+      (B, Q) int32 fire times (NO_SPIKE = silent), or (C, B, Q) for 3-D
+      inputs.
+    """
+    times, weights = _bank_shapes(times, weights)
+    k = clip_k(cfg)
+    engine = resolve_backend(backend)
+
+    if engine == "pallas":
+        # an explicit pallas request must not silently degrade — only
+        # "auto" falls back (resolve_backend already guards availability)
+        from repro.kernels import rnl_neuron
+        if times.ndim == 2:
+            return rnl_neuron.rnl_fire_times(
+                times, weights, t_steps=cfg.t_steps,
+                threshold=cfg.threshold, k=k)
+        if times.ndim == 3:
+            return rnl_neuron.rnl_fire_times_layer(
+                times, weights, t_steps=cfg.t_steps,
+                threshold=cfg.threshold, k=k)
+        raise ValueError(f"pallas backend supports (B, n) or (C, B, n) "
+                         f"volleys, got {times.shape}")
+
+    # all-pairs broadcast: (..., B, 1, n) x (..., 1, Q, n) -> (..., B, Q, n)
+    times_bq = jnp.broadcast_to(
+        times[..., :, None, :],
+        times.shape[:-1] + (weights.shape[-2], times.shape[-1]))
+    w_bq = jnp.broadcast_to(weights[..., None, :, :], times_bq.shape)
+
+    if engine == "scan":
+        return simulate_neuron(times_bq, w_bq, cfg).fire_time
+    if engine == "closed_form":
+        if k is None:
+            return fire_time_closed_form(times_bq, w_bq, cfg.threshold,
+                                         cfg.t_steps)
+        return fire_time_catwalk_closed_form(times_bq, w_bq, cfg.threshold,
+                                             cfg.t_steps, k)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -49,9 +49,13 @@ def _stabilizer(w: jax.Array, cfg: STDPConfig) -> jax.Array:
     return jnp.maximum(4.0 * u * (1.0 - u), cfg.stab_floor)
 
 
-def stdp_update(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
-                cfg: STDPConfig, key: Optional[jax.Array] = None) -> jax.Array:
-    """One STDP step for one neuron.
+def stdp_delta(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
+               cfg: STDPConfig, key: Optional[jax.Array] = None) -> jax.Array:
+    """Raw (unclipped) STDP weight delta for one neuron.
+
+    The delta form is the building block for minibatch accumulation
+    (:func:`stdp_update_column_minibatch`): per-volley deltas are computed
+    at a shared starting weight, reduced over the batch, and clipped once.
 
     Args:
       weights:  (n,) float32 in [0, w_max].
@@ -59,8 +63,6 @@ def stdp_update(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
       out_time: () int32 output spike time after WTA (NO_SPIKE if the neuron
         did not win / did not fire — then only 'search' applies).
       key: optional PRNG key for the stochastic rule; None = expectation.
-
-    Returns updated weights, clipped to [0, w_max].
     """
     x = coding.is_spike(in_times)
     y = coding.is_spike(out_time)
@@ -75,11 +77,21 @@ def stdp_update(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
         bern = jax.random.uniform(kb, weights.shape) < b
         b = bern.astype(weights.dtype)
 
-    delta = (causal * cfg.mu_capture * b
-             - anti * cfg.mu_backoff * b
-             + search * cfg.mu_search
-             - ghost * cfg.mu_backoff * b)
-    return jnp.clip(weights + delta, 0.0, float(cfg.w_max))
+    return (causal * cfg.mu_capture * b
+            - anti * cfg.mu_backoff * b
+            + search * cfg.mu_search
+            - ghost * cfg.mu_backoff * b)
+
+
+def stdp_update(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
+                cfg: STDPConfig, key: Optional[jax.Array] = None) -> jax.Array:
+    """One STDP step for one neuron (see :func:`stdp_delta` for args).
+
+    Returns updated weights, clipped to [0, w_max].
+    """
+    return jnp.clip(weights + stdp_delta(weights, in_times, out_time, cfg,
+                                         key),
+                    0.0, float(cfg.w_max))
 
 
 def stdp_update_column(weights: jax.Array, in_times: jax.Array,
@@ -110,3 +122,55 @@ def stdp_update_column(weights: jax.Array, in_times: jax.Array,
         return jax.vmap(lambda i, w, o: one(i, w, o, None))(
             idxs, weights, out_times)
     return jax.vmap(one)(idxs, weights, out_times, keys)
+
+
+def stdp_update_column_minibatch(weights: jax.Array, in_times: jax.Array,
+                                 out_times: jax.Array, winner: jax.Array,
+                                 cfg: STDPConfig,
+                                 key: Optional[jax.Array] = None,
+                                 reduction: str = "mean") -> jax.Array:
+    """Minibatch STDP for one column over a batch of B volleys.
+
+    Each volley's delta is evaluated at the *shared* starting weights with
+    the same winner/silent masking as :func:`stdp_update_column`, the B
+    deltas are reduced (mean by default; "sum" accumulates raw), and the
+    result is applied and clipped once. At B=1 with ``key=None`` this is
+    bit-identical to :func:`stdp_update_column` (mean over one delta is the
+    delta, and clip(w + 0) = w for masked rows already in range). The
+    stochastic rule draws independent Bernoullis per volley, so the keyed
+    path matches the sequential rule only in expectation.
+
+    Args:
+      weights:   (q, n) float32.
+      in_times:  (B, n) int32 input volleys.
+      out_times: (B, q) int32 post-WTA output spike times.
+      winner:    (B,) int32 winner index per volley (-1 = column silent).
+      reduction: "mean" (batch-size-invariant step scale) or "sum".
+    """
+    if reduction not in ("mean", "sum"):
+        raise ValueError(f"unknown reduction {reduction!r}")
+    bsz, q = out_times.shape
+    vkeys = (jax.random.split(key, bsz) if key is not None else None)
+    idxs = jnp.arange(q)
+
+    def one_volley(in_t, out_t, win, vkey):
+        def one_neuron(idx, w, o, nkey):
+            d = stdp_delta(w, in_t, o, cfg, nkey)
+            keep = (idx == win) | (win < 0)
+            return jnp.where(keep, d, 0.0)
+
+        if vkey is None:
+            return jax.vmap(lambda i, w, o: one_neuron(i, w, o, None))(
+                idxs, weights, out_t)
+        nkeys = jax.random.split(vkey, q)
+        return jax.vmap(one_neuron)(idxs, weights, out_t, nkeys)
+
+    if vkeys is None:
+        deltas = jax.vmap(lambda t, o, w: one_volley(t, o, w, None))(
+            in_times, out_times, winner)
+    else:
+        deltas = jax.vmap(one_volley)(in_times, out_times, winner, vkeys)
+    acc = jnp.sum(deltas, axis=0)
+    if reduction == "mean":
+        acc = acc / bsz
+    return jnp.clip(weights + acc, 0.0, float(cfg.w_max))

@@ -6,10 +6,23 @@ detection — over a (batch x neurons) tile, sweeping gamma-cycle ticks in a
 ``fori_loop`` so the bit-plane (B, Q, n) working set stays in VMEM and HBM
 traffic is one read of spike times/weights + one write of fire times.
 
-Grid: (batch tiles, neuron tiles). Block shapes:
-  times   (B_TILE, n)     int32
-  weights (Q_TILE, n)     int32
-  fire    (B_TILE, Q_TILE) int32 out
+Two entry points (DESIGN.md §3.2):
+
+  * :func:`rnl_fire_times` — one neuron bank, grid (batch tiles, neuron
+    tiles). This is the ``backend="pallas"`` engine behind
+    :func:`repro.core.neuron.fire_times_bank`.
+  * :func:`rnl_fire_times_layer` — C independent columns in one launch,
+    grid (columns, batch tiles, neuron tiles); serves
+    :class:`repro.core.layer.TNNLayer` without a host-side column loop.
+
+Both optionally emit a second output: per-(volley, neuron) *clip-event*
+counts (ticks where the raw popcount exceeded k — the paper's sparsity-
+violation diagnostic), fused into the same tick sweep at no extra HBM read.
+
+Block shapes (bank):
+  times   (B_TILE, n)      int32
+  weights (Q_TILE, n)      int32
+  fire    (B_TILE, Q_TILE) int32 out   [+ clip (B_TILE, Q_TILE) int32 out]
 """
 
 from __future__ import annotations
@@ -30,32 +43,66 @@ B_TILE = 8
 Q_TILE = 8
 
 
-def _rnl_kernel(times_ref, weights_ref, out_ref, *, t_steps, threshold, k):
-    times = times_ref[...]                            # (B, n)
-    w = weights_ref[...]                              # (Q, n)
+def _tick_sweep(times, w, *, t_steps, threshold, k):
+    """Shared tick loop: (B, n) times x (Q, n) weights -> fire/clip (B, Q)."""
 
     def tick(t, carry):
-        pot, fired = carry
+        pot, fired, clip = carry
         rel = t - times[:, None, :]                   # (B, 1, n)
         active = (rel >= 0) & (rel < w[None, :, :])   # (B, Q, n)
-        inc = jnp.sum(active.astype(jnp.int32), axis=-1)   # (B, Q)
+        raw = jnp.sum(active.astype(jnp.int32), axis=-1)   # (B, Q)
         if k is not None:
-            inc = jnp.minimum(inc, k)                 # Catwalk clip
+            inc = jnp.minimum(raw, k)                 # Catwalk clip
+            clip = clip + (raw > k).astype(jnp.int32)
+        else:
+            inc = raw
         pot = pot + inc
         newly = (pot >= threshold) & (fired == NO_SPIKE_INT)
         fired = jnp.where(newly, t, fired)
-        return pot, fired
+        return pot, fired, clip
 
     b, q = times.shape[0], w.shape[0]
     pot0 = jnp.zeros((b, q), jnp.int32)
     fire0 = jnp.full((b, q), NO_SPIKE_INT, jnp.int32)
-    _, fired = jax.lax.fori_loop(0, t_steps, tick, (pot0, fire0))
+    clip0 = jnp.zeros((b, q), jnp.int32)
+    _, fired, clip = jax.lax.fori_loop(0, t_steps, tick, (pot0, fire0, clip0))
+    return fired, clip
+
+
+def _rnl_kernel(times_ref, weights_ref, out_ref, *, t_steps, threshold, k):
+    fired, _ = _tick_sweep(times_ref[...], weights_ref[...],
+                           t_steps=t_steps, threshold=threshold, k=k)
     out_ref[...] = fired
 
 
-@functools.partial(jax.jit, static_argnames=("t_steps", "threshold", "k"))
+def _rnl_clip_kernel(times_ref, weights_ref, out_ref, clip_ref, *,
+                     t_steps, threshold, k):
+    fired, clip = _tick_sweep(times_ref[...], weights_ref[...],
+                              t_steps=t_steps, threshold=threshold, k=k)
+    out_ref[...] = fired
+    clip_ref[...] = clip
+
+
+def _rnl_layer_kernel(times_ref, weights_ref, out_ref, *,
+                      t_steps, threshold, k):
+    fired, _ = _tick_sweep(times_ref[0], weights_ref[0],
+                           t_steps=t_steps, threshold=threshold, k=k)
+    out_ref[0] = fired
+
+
+def _rnl_layer_clip_kernel(times_ref, weights_ref, out_ref, clip_ref, *,
+                           t_steps, threshold, k):
+    fired, clip = _tick_sweep(times_ref[0], weights_ref[0],
+                              t_steps=t_steps, threshold=threshold, k=k)
+    out_ref[0] = fired
+    clip_ref[0] = clip
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_steps", "threshold", "k", "with_clip"))
 def rnl_fire_times(times: jax.Array, weights: jax.Array, *, t_steps: int,
-                   threshold: int, k: int | None = None) -> jax.Array:
+                   threshold: int, k: int | None = None,
+                   with_clip: bool = False):
     """Fire times of a neuron bank.
 
     Args:
@@ -64,9 +111,12 @@ def rnl_fire_times(times: jax.Array, weights: jax.Array, *, t_steps: int,
       t_steps: gamma-cycle length.
       threshold: firing threshold.
       k: None -> full-PC dendrite; int -> Catwalk top-k clipped dendrite.
+      with_clip: also return per-(volley, neuron) clip-event counts.
 
     Returns:
-      (B, Q) int32 fire times (NO_SPIKE where the neuron stays silent).
+      (B, Q) int32 fire times (NO_SPIKE where the neuron stays silent);
+      with ``with_clip`` a ``(fire, clip)`` tuple, clip (B, Q) int32 counts
+      of ticks whose raw popcount exceeded k (all-zero when k is None).
     """
     bsz, n = times.shape
     qsz, n2 = weights.shape
@@ -78,16 +128,82 @@ def rnl_fire_times(times: jax.Array, weights: jax.Array, *, t_steps: int,
                       constant_values=int(NO_SPIKE))
     weights_p = jnp.pad(weights, ((0, q_pad - qsz), (0, 0)))
 
-    out = pl.pallas_call(
-        functools.partial(_rnl_kernel, t_steps=t_steps, threshold=threshold,
-                          k=k),
-        out_shape=jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32),
-        grid=(b_pad // B_TILE, q_pad // Q_TILE),
-        in_specs=[
-            pl.BlockSpec((B_TILE, n), lambda b, q: (b, 0)),
-            pl.BlockSpec((Q_TILE, n), lambda b, q: (q, 0)),
-        ],
-        out_specs=pl.BlockSpec((B_TILE, Q_TILE), lambda b, q: (b, q)),
+    grid = (b_pad // B_TILE, q_pad // Q_TILE)
+    in_specs = [
+        pl.BlockSpec((B_TILE, n), lambda b, q: (b, 0)),
+        pl.BlockSpec((Q_TILE, n), lambda b, q: (q, 0)),
+    ]
+    out_spec = pl.BlockSpec((B_TILE, Q_TILE), lambda b, q: (b, q))
+    if not with_clip:
+        out = pl.pallas_call(
+            functools.partial(_rnl_kernel, t_steps=t_steps,
+                              threshold=threshold, k=k),
+            out_shape=jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32),
+            grid=grid, in_specs=in_specs, out_specs=out_spec,
+            interpret=common.use_interpret(),
+        )(times_p, weights_p)
+        return out[:bsz, :qsz]
+    fire, clip = pl.pallas_call(
+        functools.partial(_rnl_clip_kernel, t_steps=t_steps,
+                          threshold=threshold, k=k),
+        out_shape=[jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32)],
+        grid=grid, in_specs=in_specs, out_specs=[out_spec, out_spec],
         interpret=common.use_interpret(),
     )(times_p, weights_p)
-    return out[:bsz, :qsz]
+    return fire[:bsz, :qsz], clip[:bsz, :qsz]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_steps", "threshold", "k", "with_clip"))
+def rnl_fire_times_layer(times: jax.Array, weights: jax.Array, *,
+                         t_steps: int, threshold: int, k: int | None = None,
+                         with_clip: bool = False):
+    """Fire times of C independent neuron banks (a TNN layer of columns).
+
+    One launch, grid (C, batch tiles, neuron tiles): column c pairs volley
+    slice ``times[c]`` with weight bank ``weights[c]`` — the receptive-field
+    gather happens upstream in :mod:`repro.core.layer`.
+
+    Args:
+      times:   (C, B, n) int32 per-column input spike times.
+      weights: (C, Q, n) int32 per-column synaptic weights.
+      with_clip: also return clip-event counts.
+
+    Returns:
+      (C, B, Q) int32 fire times; with ``with_clip`` a ``(fire, clip)``
+      tuple of that shape.
+    """
+    csz, bsz, n = times.shape
+    c2, qsz, n2 = weights.shape
+    assert csz == c2 and n == n2, (times.shape, weights.shape)
+    b_pad = common.round_up(bsz, B_TILE)
+    q_pad = common.round_up(qsz, Q_TILE)
+    times_p = jnp.pad(times, ((0, 0), (0, b_pad - bsz), (0, 0)),
+                      constant_values=int(NO_SPIKE))
+    weights_p = jnp.pad(weights, ((0, 0), (0, q_pad - qsz), (0, 0)))
+
+    grid = (csz, b_pad // B_TILE, q_pad // Q_TILE)
+    in_specs = [
+        pl.BlockSpec((1, B_TILE, n), lambda c, b, q: (c, b, 0)),
+        pl.BlockSpec((1, Q_TILE, n), lambda c, b, q: (c, q, 0)),
+    ]
+    out_spec = pl.BlockSpec((1, B_TILE, Q_TILE), lambda c, b, q: (c, b, q))
+    out_shape = jax.ShapeDtypeStruct((csz, b_pad, q_pad), jnp.int32)
+    if not with_clip:
+        out = pl.pallas_call(
+            functools.partial(_rnl_layer_kernel, t_steps=t_steps,
+                              threshold=threshold, k=k),
+            out_shape=out_shape,
+            grid=grid, in_specs=in_specs, out_specs=out_spec,
+            interpret=common.use_interpret(),
+        )(times_p, weights_p)
+        return out[:, :bsz, :qsz]
+    fire, clip = pl.pallas_call(
+        functools.partial(_rnl_layer_clip_kernel, t_steps=t_steps,
+                          threshold=threshold, k=k),
+        out_shape=[out_shape, out_shape],
+        grid=grid, in_specs=in_specs, out_specs=[out_spec, out_spec],
+        interpret=common.use_interpret(),
+    )(times_p, weights_p)
+    return fire[:, :bsz, :qsz], clip[:, :bsz, :qsz]

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.sharding import compat
+
 from repro.configs.base import SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeConfig
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch.input_specs import cell_is_applicable, input_specs
@@ -168,7 +170,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return rec
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = build_lowered(cfg, shape, mesh, opt=opt)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -176,6 +178,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax 0.4.x: [dict] per module
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
     # trip-count-aware accounting (XLA cost_analysis counts while bodies
     # ONCE — scan-over-layers under-reports by ~n_layers; hlo_cost fixes

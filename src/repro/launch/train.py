@@ -81,7 +81,7 @@ def main():
             lambda: TL.init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
         st_sh = SH.param_shardings(state_shape, mesh,
                                    replicate_embed=cfg.batch_over_model)
-        ctx = jax.set_mesh(mesh)
+        ctx = SH.compat.set_mesh(mesh)
         ctx.__enter__()
         state = jax.device_put(state, st_sh)
         step_fn = jax.jit(step_fn, in_shardings=(st_sh, None),

@@ -198,7 +198,8 @@ def moe_apply_ep(p, x: jax.Array, cfg: MoEConfig, fsdp: bool = False
     ``fsdp``: expert F dims stay sharded over the DP axes at rest and are
     all-gathered per use (arctic-scale experts don't fit replicated)."""
     from jax.sharding import PartitionSpec as P
-    am = jax.sharding.get_abstract_mesh()
+    from repro.sharding import compat
+    am = compat.get_abstract_mesh()
     names = set(am.axis_names) if am is not None else set()
     if "model" not in names or cfg.n_experts % am.shape["model"]:
         return moe_apply(p, x, cfg)
@@ -253,7 +254,7 @@ def moe_apply_ep(p, x: jax.Array, cfg: MoEConfig, fsdp: bool = False
         return out, jax.lax.pmean(aux, dp + ("model",))
 
     p_in = {k: p[k] for k in in_specs[0]}
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         body, mesh=am, in_specs=in_specs,
-        out_specs=(P(dpspec, None), P()), check_vma=False)(p_in, xt)
+        out_specs=(P(dpspec, None), P()))(p_in, xt)
     return out.reshape(b, s, d), {"aux_loss": aux}

@@ -33,8 +33,13 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_HEADER_RE = re.compile(r"^(ENTRY )?(%[\w.\-]+|[\w.\-]+) \((.*)\) -> ",
                              re.M)
 _DEF_RE = re.compile(r"^\s+(?:ROOT )?(%[\w.\-]+) = (.+)$")
+#: optional "f32[64,64]{1,0} " operand type prefix — older XLA (jax 0.4.x)
+#: prints typed operands, newer prints bare %names; dtype-anchored so a
+#: bare %name can never be swallowed as a prefix.
+_TYPED = r"(?:[a-z][a-z0-9]*\[[\d,]*\][^ ]* )?"
 _DOT_RE = re.compile(
-    r"dot\((%[\w.\-]+), (%[\w.\-]+)\),.*?lhs_contracting_dims=\{([\d,]*)\}")
+    r"dot\(" + _TYPED + r"(%[\w.\-]+), " + _TYPED + r"(%[\w.\-]+)\),"
+    r".*?lhs_contracting_dims=\{([\d,]*)\}")
 _CALLEE_RES = (
     (re.compile(r"calls=(%[\w.\-]+)"), "fusion"),
     (re.compile(r"body=(%[\w.\-]+)"), "while_body"),
@@ -100,7 +105,8 @@ def _param_shapes(header: str) -> Dict[str, str]:
     return out
 
 
-_DUS_RE = re.compile(r"dynamic-update-slice\((%[\w.\-]+), (%[\w.\-]+)")
+_DUS_RE = re.compile(r"dynamic-update-slice\(" + _TYPED + r"(%[\w.\-]+), "
+                     + _TYPED + r"(%[\w.\-]+)")
 
 #: opcodes whose outputs hit HBM on TPU. Elementwise/norm/softmax chains,
 #: transposes, copies and small reductions fuse into their MXU/data-move

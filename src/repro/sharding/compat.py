@@ -1,0 +1,44 @@
+"""jax version compatibility for the mesh/shard_map API split.
+
+The distribution layer targets the jax>=0.5 ambient-mesh API
+(``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh`` / ``jax.shard_map``)
+but must run on 0.4.x, where the equivalents are the ``Mesh`` context
+manager, the thread-resources physical mesh, and
+``jax.experimental.shard_map``. Import these wrappers instead of touching
+either API directly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    """The active mesh (entered via :func:`set_mesh`) or None.
+
+    jax>=0.5 returns the abstract mesh; 0.4.x the physical one — both
+    expose the ``axis_names`` / ``shape`` surface the callers use.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh
+    m = _mesh.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for ambient-mesh lookups."""
+    fn = getattr(jax, "set_mesh", None)
+    # a 0.4.x Mesh is itself the context manager
+    return fn(mesh) if fn is not None else mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_rep)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)

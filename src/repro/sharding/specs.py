@@ -26,6 +26,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.sharding import compat
+
 Axis = Union[str, Tuple[str, ...], None]
 
 
@@ -200,7 +202,7 @@ def maybe_wsc(x, *spec):
     axes are absent (CPU unit tests, single-device benches). ``spec``
     entries are axis names, tuples of axis names, or None; axes that do
     not divide the corresponding dim are dropped."""
-    am = jax.sharding.get_abstract_mesh()
+    am = compat.get_abstract_mesh()
     if am is None or not am.axis_names:
         return x
     names = set(am.axis_names)

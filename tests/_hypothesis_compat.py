@@ -1,0 +1,48 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The tier-1 suite must collect and run without ``hypothesis`` installed
+(requirements-dev.txt declares it for full property coverage). Importing
+
+    from _hypothesis_compat import given, settings, st
+
+yields the real hypothesis objects when available; otherwise stand-ins
+that keep module collection working and skip ONLY the property tests,
+leaving every plain/parametrized test in the module runnable.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when dep is absent
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Accepts any ``st.xxx(...)`` strategy construction at decoration
+        time; the values are never drawn because the test body is skipped."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _StrategyStub()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            # Zero-arg replacement: hypothesis-bound parameters must not
+            # leak into pytest's signature (it would hunt for fixtures).
+            def skipper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return decorate

@@ -34,6 +34,7 @@ def test_moe_ep_dispatch_matches_pjit_dispatch():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs.registry import get_config
         from repro.models import moe as M, transformer as T
+        from repro.sharding import compat
 
         cfg = get_config('deepseek-v2-lite-16b').smoke()
         mcfg = dataclasses.replace(cfg.moe, capacity_factor=8.0)
@@ -45,7 +46,7 @@ def test_moe_ep_dispatch_matches_pjit_dispatch():
             lambda p, x: M.moe_apply(p, x, mcfg))(p, x)
 
         mesh = jax.make_mesh((2, 4), ('data', 'model'))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             ep_out, ep_aux = jax.jit(
                 lambda p, x: M.moe_apply_ep(p, x, mcfg))(p, x)
         np.testing.assert_allclose(np.asarray(ref_out), np.asarray(ep_out),
@@ -63,6 +64,7 @@ def test_sharded_train_step_matches_single_device():
         from repro.configs.registry import get_config
         from repro.sharding import specs as SH
         from repro.train import train_loop as TL
+        from repro.sharding import compat
         from repro.optim.optimizers import AdamWConfig
 
         cfg = get_config('internlm2-1.8b').smoke()
@@ -78,7 +80,7 @@ def test_sharded_train_step_matches_single_device():
         state_shape = jax.eval_shape(
             lambda: TL.init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
         st_sh = SH.param_shardings(state_shape, mesh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             state2 = TL.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
             state2 = jax.device_put(state2, st_sh)
             data_sh = SH.data_shardings(mesh, {

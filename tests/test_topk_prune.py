@@ -4,7 +4,7 @@ import itertools
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import sorting_networks as sn
 from repro.core.topk_prune import apply_topk, prune_topk, topk_network
