@@ -7,73 +7,90 @@ dry-run roofline. Oracle (jnp) timings on CPU are the honest baseline.
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import (emit, reset_results, smoke_mode, time_fn,
+                               write_json)
 from repro.core import coding, layer, unary_ops
 from repro.core.topk_prune import topk_network
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
+    """Full-size by default; ``smoke`` (or REPRO_BENCH_SMOKE=1) shrinks
+    sizes/iterations to CI-smoke scale — plumbing validation only."""
+    smoke = smoke or smoke_mode()
+    reset_results()
+    iters = 2 if smoke else 20
+    slow_iters = 2 if smoke else 5
     key = jax.random.PRNGKey(0)
 
     # unary top-k relocation (jnp fast path vs gate-level oracle)
+    rows = 64 if smoke else 512
     net = topk_network("auto", 64, 2)
-    bits = jax.random.bernoulli(key, 0.05, (512, 64))
+    bits = jax.random.bernoulli(key, 0.05, (rows, 64))
     f_fast = jax.jit(lambda b: unary_ops.topk_bits_fast(b, 2))
     f_gate = jax.jit(lambda b: ref.unary_topk_relocate(b, net))
-    emit("kernels/unary_topk_fastpath_512x64", time_fn(f_fast, bits),
-         "min(popcount,k) shortcut")
-    emit("kernels/unary_topk_gatelevel_512x64", time_fn(f_gate, bits),
-         f"{net.num_units}_CAS_units")
+    emit(f"kernels/unary_topk_fastpath_{rows}x64",
+         time_fn(f_fast, bits, iters=iters), "min(popcount,k) shortcut")
+    emit(f"kernels/unary_topk_gatelevel_{rows}x64",
+         time_fn(f_gate, bits, iters=iters), f"{net.num_units}_CAS_units")
 
     # rnl neuron bank
-    times = jax.random.randint(key, (64, 64), 0, 48)
+    nb = 8 if smoke else 64
+    times = jax.random.randint(key, (nb, 64), 0, 48)
     w = jax.random.randint(key, (16, 64), 0, 8)
     f_rnl = jax.jit(lambda t: ref.rnl_fire_times(t, w, t_steps=64,
                                                  threshold=9, k=2))
-    emit("kernels/rnl_ref_64x16x64", time_fn(f_rnl, times), "closed_form")
+    emit(f"kernels/rnl_ref_{nb}x16x64", time_fn(f_rnl, times, iters=iters),
+         "closed_form")
 
     # batched multi-column TNN layer forward: closed-form vs Pallas backend
     lcfg = layer.TNNLayer(n_columns=4, rf_size=16, n_neurons=16,
                           threshold=12, t_steps=32, dendrite="catwalk", k=2,
                           backend="closed_form")
     w_layer = layer.init_layer(key, lcfg)
-    bsz = 64
+    bsz = 8 if smoke else 64
     raw = jax.random.randint(key, (bsz, lcfg.n_inputs), 0, 48)
     volleys = jnp.where(raw >= 32, coding.NO_SPIKE, raw)
     for backend in ("closed_form", "pallas"):
         cfg_b = dataclasses.replace(lcfg, backend=backend)
         f_layer = jax.jit(lambda v, c=cfg_b: layer.layer_forward(
             w_layer, v, c)[0])
-        us = time_fn(f_layer, volleys, iters=5)
+        us = time_fn(f_layer, volleys, iters=slow_iters)
         emit(f"kernels/tnn_layer_fwd_{bsz}x4x16_{backend}", us,
              f"{bsz * 1e6 / us:.0f}_volleys_per_s")
 
     # ssd scan: chunked vs token scan
     ks = jax.random.split(key, 4)
-    bh, L, p, n = 8, 1024, 64, 64
+    bh, L, p, n = (2, 256, 64, 64) if smoke else (8, 1024, 64, 64)
     u = jax.random.normal(ks[0], (bh, L, p), jnp.bfloat16)
     ld = -jax.nn.softplus(jax.random.normal(ks[1], (bh, L)))
     b = (jax.random.normal(ks[2], (bh, L, n)) * 0.3).astype(jnp.bfloat16)
     c = (jax.random.normal(ks[3], (bh, L, n)) * 0.3).astype(jnp.bfloat16)
     f_chunk = jax.jit(lambda *a: ref.ssd_scan_chunked(*a, 128))
     f_tok = jax.jit(lambda *a: ref.ssd_scan(*a))
-    t_chunk = time_fn(f_chunk, u, ld, b, c, iters=5)
-    t_tok = time_fn(f_tok, u, ld, b, c, iters=5)
-    emit("kernels/ssd_chunked_8x1024", t_chunk, "chunk=128")
-    emit("kernels/ssd_tokenscan_8x1024", t_tok,
+    t_chunk = time_fn(f_chunk, u, ld, b, c, iters=slow_iters)
+    t_tok = time_fn(f_tok, u, ld, b, c, iters=slow_iters)
+    emit(f"kernels/ssd_chunked_{bh}x{L}", t_chunk, "chunk=128")
+    emit(f"kernels/ssd_tokenscan_{bh}x{L}", t_tok,
          f"speedup={t_tok / max(t_chunk, 1e-9):.1f}x")
 
     # moe gate
-    logits = jax.random.normal(key, (8192, 64))
+    ntok = 512 if smoke else 8192
+    logits = jax.random.normal(key, (ntok, 64))
     f_gate2 = jax.jit(lambda x: ref.moe_gate_topk(x, 6))
-    emit("kernels/moe_gate_8192x64_top6", time_fn(f_gate2, logits), "ref")
+    emit(f"kernels/moe_gate_{ntok}x64_top6",
+         time_fn(f_gate2, logits, iters=iters), "ref")
+    write_json("kernels", smoke=smoke)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI plumbing validation")
+    main(smoke=ap.parse_args().smoke)

@@ -1,0 +1,92 @@
+"""TNN serving benchmark: volleys/sec through the slot engine.
+
+Sweeps slot-pool size (batch width) x neuron-bank backend over a fixed
+synthetic client population and reports engine throughput, the unbatched
+per-request baseline, and the batching speedup. Emits the usual CSV rows
+plus a ``BENCH_serve_tnn.json`` artifact (see benchmarks/common.py).
+
+CPU notes: ``closed_form`` is the honest CPU number; ``scan`` mirrors the
+hardware tick loop; ``pallas`` runs the interpreter on CPU (validation, not
+speed) and is only included with ``--backends ...,pallas``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve_tnn [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import emit, reset_results, smoke_mode, write_json
+from repro.core import network
+from repro.serve import tnn_engine
+
+from examples.serve_tnn import build_network, synth_clients
+
+
+def bench_one(params, net, streams, n_slots: int, backend: str) -> float:
+    """Serve the whole population once; returns engine volleys/sec."""
+    eng = tnn_engine.TNNEngine(
+        params, net,
+        tnn_engine.TNNServeConfig(n_slots=n_slots, backend=backend))
+    # warm the jit cache so throughput reflects steady-state serving;
+    # reset so warmup steps don't pollute the emitted occupancy/latency
+    eng.serve([streams[0]])
+    eng.reset_stats()
+    for s in streams:
+        eng.submit(s)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    total = sum(s.shape[0] for s in streams)
+    vps = total / dt
+    st = eng.stats()
+    emit(f"serve/tnn_B{n_slots}_{backend}", dt * 1e6 / total,
+         f"{vps:.0f}_volleys_per_s_occ{st['slot_occupancy']:.2f}")
+    return vps
+
+
+def main(smoke: bool = False, backends=None) -> None:
+    smoke = smoke or smoke_mode()
+    reset_results()
+    backends = backends or ["closed_form", "scan"]
+    n_clients = 16 if smoke else 96
+    slot_sweep = [2, 4] if smoke else [4, 8, 16, 32]
+
+    net = build_network()
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    streams = synth_clients(n_clients, n_features=4, n_fields=8,
+                            t_max=net.layers[0].t_steps)
+    total = sum(s.shape[0] for s in streams)
+
+    # naive per-request oracle (eager, unjitted) — the "no serving stack
+    # at all" number; the fair batching baseline is the B=1 engine below.
+    t0 = time.perf_counter()
+    for s in streams[:max(n_clients // 8, 2)]:
+        tnn_engine.reference_outputs(params, net, s)
+    base_dt = time.perf_counter() - t0
+    base_total = sum(s.shape[0] for s in streams[:max(n_clients // 8, 2)])
+    emit("serve/tnn_naive_eager_reference", base_dt * 1e6 / base_total,
+         f"{base_total / base_dt:.0f}_volleys_per_s")
+
+    for backend in backends:
+        base_vps = bench_one(params, net, streams, 1, backend)
+        for n_slots in slot_sweep:
+            vps = bench_one(params, net, streams, n_slots, backend)
+            print(f"# B={n_slots:3d} {backend:12s} {vps:8.0f} volleys/s "
+                  f"({vps / base_vps:.1f}x vs B=1 {backend}) "
+                  f"[{total} volleys, {n_clients} clients]")
+    write_json("serve_tnn", smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI plumbing validation")
+    ap.add_argument("--backends", default=None,
+                    help="comma list: closed_form,scan,pallas")
+    args = ap.parse_args()
+    main(smoke=args.smoke,
+         backends=args.backends.split(",") if args.backends else None)

@@ -1,8 +1,24 @@
-"""Benchmark plumbing: timing + CSV emit."""
+"""Benchmark plumbing: timing + CSV emit + BENCH_*.json artifacts.
 
+Every ``emit`` prints the historical ``name,us|value,derived`` CSV line AND
+records the row in-process; ``write_json`` dumps the accumulated rows (plus
+environment metadata) to ``BENCH_<name>.json`` so CI can upload them as
+artifacts and the perf trajectory accumulates run over run.
+
+Smoke mode (``--smoke`` flags or ``REPRO_BENCH_SMOKE=1``) shrinks problem
+sizes/iterations so the whole bench suite validates plumbing in seconds on a
+CPU-only CI runner; smoke numbers are marked as such in the JSON and are NOT
+comparable to full-size runs.
+"""
+
+import json
+import os
+import platform
 import time
 
 import jax
+
+_RESULTS = []
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
@@ -21,6 +37,50 @@ def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
 
 
 def emit(name: str, us_per_call, derived: str = "") -> None:
+    _RESULTS.append({"name": name,
+                     "us_per_call": us_per_call,
+                     "derived": derived})
     if isinstance(us_per_call, float):
         us_per_call = f"{us_per_call:.2f}"
     print(f"{name},{us_per_call},{derived}")
+
+
+def smoke_mode() -> bool:
+    """True when benches should run tiny (CI smoke job)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def reset_results() -> None:
+    """Drop buffered rows. JSON-emitting bench mains call this first so
+    rows printed earlier in the same process (benchmarks/run.py runs
+    several sections back to back) don't leak into their artifact."""
+    _RESULTS.clear()
+
+
+def write_json(bench: str, out_dir: str = None, smoke: bool = None) -> str:
+    """Dump rows emitted since the last dump to ``BENCH_<bench>.json``.
+
+    Output dir: ``out_dir`` arg, else ``$REPRO_BENCH_DIR``, else cwd.
+    ``smoke`` marks the artifact as a tiny-size run (default: the env
+    switch). Clears the row buffer afterwards; emitting mains also call
+    :func:`reset_results` up front so earlier same-process sections don't
+    contaminate their artifact. Returns the path written.
+    """
+    out_dir = out_dir or os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    rows = list(_RESULTS)
+    _RESULTS.clear()
+    payload = {
+        "bench": bench,
+        "smoke": smoke_mode() if smoke is None else smoke,
+        "unix_time": time.time(),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "results": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path} ({len(rows)} rows)")
+    return path

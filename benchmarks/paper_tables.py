@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.core import hwcost
-from repro.core import sorting_networks as sn
 from repro.core.topk_prune import topk_network
 
 

@@ -19,7 +19,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import coding, column, hwcost, layer, network, stdp
 

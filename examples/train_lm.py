@@ -17,7 +17,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--preset cpu-smoke]
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax

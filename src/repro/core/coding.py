@@ -43,6 +43,42 @@ def time_to_value(times: jax.Array, t_max: int) -> jax.Array:
     return jnp.where(is_spike(times), v, 0.0)
 
 
+def grf_encode(values: jax.Array, n_fields: int, t_max: int,
+               v_min: float = 0.0, v_max: float = 1.0,
+               sigma: float | None = None,
+               cutoff: float = 0.05) -> jax.Array:
+    """Gaussian receptive field population coding (Bohte et al. 2002).
+
+    The standard TNN front end for analog features: each scalar is covered
+    by ``n_fields`` overlapping Gaussian receptive fields with centers
+    evenly spaced over ``[v_min, v_max]``; field j's activation
+    ``exp(-(v - c_j)^2 / 2 sigma^2)`` becomes a spike time via
+    :func:`value_to_time` — strong overlap = early spike. Activations below
+    ``cutoff`` stay silent (``NO_SPIKE``), which is exactly the sparse,
+    bursty volley shape the Catwalk dendrite exploits: only a handful of
+    the ``d * n_fields`` lines fire per gamma cycle.
+
+    Args:
+      values: (..., d) float features.
+      n_fields: receptive fields per scalar.
+      t_max: gamma-cycle length for the time code.
+      v_min, v_max: feature range the field centers span.
+      sigma: field width; default 0.8x the center spacing (heavy overlap).
+      cutoff: activations below this encode as NO_SPIKE.
+
+    Returns:
+      (..., d, n_fields) int32 spike times; flatten the last two axes for
+      a ``(..., d * n_fields)`` input volley.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    centers = jnp.linspace(v_min, v_max, n_fields)
+    if sigma is None:
+        sigma = 0.8 * (v_max - v_min) / max(n_fields - 1, 1)
+    act = jnp.exp(-0.5 * ((values[..., None] - centers) / sigma) ** 2)
+    act = jnp.where(act < cutoff, 0.0, act)
+    return value_to_time(act, t_max)
+
+
 def times_to_monotone_wave(times: jax.Array, t_steps: int) -> jax.Array:
     """Leading-0 rising-edge unary wave: ``wave[..., t, i] = (t >= times[i])``.
 

@@ -35,11 +35,9 @@ Algorithm-1 gate counts (Fig. 5 / Fig. 6) are reported unmodeled.
 from __future__ import annotations
 
 import dataclasses
-import math
 from collections import Counter
 from typing import Dict
 
-from repro.core import sorting_networks as sn
 from repro.core.topk_prune import topk_network
 
 # --------------------------------------------------------------------------

@@ -34,7 +34,6 @@ use. The Pallas kernel (kernels/rnl_neuron.py) fuses steps 1-3.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Literal, Optional
 
 import jax

@@ -16,9 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
 
 

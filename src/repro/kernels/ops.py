@@ -12,7 +12,6 @@ from __future__ import annotations
 import os
 from typing import Literal
 
-import jax
 
 from repro.kernels import moe_gate as _moe
 from repro.kernels import ref as _ref

@@ -73,7 +73,6 @@ def main():
 
     # mesh + shardings when >1 device (smoke: single device, plain jit)
     if jax.device_count() > 1:
-        import math
         model_par = min(16, jax.device_count())
         data_par = jax.device_count() // model_par
         mesh = jax.make_mesh((data_par, model_par), ("data", "model"))

@@ -17,7 +17,6 @@ with per-block activation rematerialization (cfg.remat='block').
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

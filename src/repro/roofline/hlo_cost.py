@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from functools import lru_cache
 from typing import Dict, List, Tuple
 
 _DTYPE_BYTES = {

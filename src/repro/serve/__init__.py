@@ -1,1 +1,6 @@
-"""repro.serve subpackage."""
+"""repro.serve subpackage: slot-based serving engines (DESIGN.md §5).
+
+* :mod:`repro.serve.slots` — generic slot pool / admission machinery.
+* :mod:`repro.serve.engine` — LM engine (prefill + cached decode).
+* :mod:`repro.serve.tnn_engine` — TNN volley engine (continuous batching).
+"""

@@ -1,14 +1,17 @@
-"""Batched serving engine: prefill + decode over slot-based batches.
+"""Batched LM serving engine: prefill + decode over slot-based batches.
 
 Static batching with per-slot completion: a batch of requests is prefixed
 into the KV cache (left-aligned, PAD-masked), then decoded one token per
-step for every live slot; finished slots (EOS or length budget) stop
+step for every live slot; finished slots (EOS or length budget) retire
+through the shared :class:`repro.serve.slots.SlotPool` and stop
 contributing. Greedy and temperature sampling. The engine drives the same
 ``decode_step`` artifact that the dry-run lowers for the production mesh.
 
 Continuous batching (slot re-fill mid-flight) would need per-slot cache
-positions; with the cache layout here that is a planned extension —
-noted in DESIGN.md §5.
+positions; with the cache layout here that is a planned extension — noted
+in DESIGN.md §5.2. The TNN volley engine (tnn_engine.py), whose state is
+per-cycle rather than a positional cache, already re-fills continuously
+through the same pool machinery.
 """
 
 from __future__ import annotations
@@ -23,6 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data import tokenizer as tok
 from repro.models import transformer as T
+from repro.serve.slots import SlotPool
 
 
 @dataclasses.dataclass
@@ -53,6 +57,15 @@ class Engine:
             self.params, self.cfg, b, scfg.max_len,
             **({"frames": jnp.asarray(frames)} if frames is not None else {}))
 
+        # one slot per request; FIFO admission puts prompt r into slot r,
+        # matching batch row r of the decode state. Retirement (EOS/budget)
+        # is per-slot; the KV layout pins admission to the prefill, so the
+        # pool drains without re-fill (DESIGN.md §5.2).
+        pool: SlotPool[int] = SlotPool(b)
+        for r in range(b):
+            pool.submit(r)
+        pool.admit()
+
         # left-aligned prompt matrix; PAD beyond each prompt
         mat = np.full((b, max_prompt), tok.PAD, np.int32)
         for r, p in enumerate(prompts):
@@ -63,7 +76,6 @@ class Engine:
         for t in range(max_prompt):
             logits, state = self._step(self.params, state, mat[:, t:t + 1])
         # first generated token comes from the final prompt position
-        done = np.zeros((b,), bool)
         for i in range(max_new_tokens):
             lg = np.asarray(logits, np.float32)
             if scfg.temperature > 0:
@@ -72,12 +84,11 @@ class Engine:
                     k2, jnp.asarray(lg) / scfg.temperature, axis=-1))
             else:
                 nxt = lg.argmax(-1)
-            for r in range(b):
-                if not done[r]:
-                    outs[r].append(int(nxt[r]))
-                    if nxt[r] == scfg.eos_id or len(outs[r]) >= max_new_tokens:
-                        done[r] = True
-            if done.all():
+            for r, _ in list(pool.live()):
+                outs[r].append(int(nxt[r]))
+                if nxt[r] == scfg.eos_id or len(outs[r]) >= max_new_tokens:
+                    pool.retire(r)
+            if pool.n_live == 0:
                 break
             logits, state = self._step(self.params, state,
                                        nxt.astype(np.int32)[:, None])

@@ -1,0 +1,173 @@
+"""Generic slot-pool machinery for slot-based serving engines (DESIGN.md §5.1).
+
+Both serving engines batch heterogeneous client requests into a fixed pool of
+B *slots* — the batch rows of one compiled step function. A request waits in a
+FIFO pending queue, is admitted into the lowest free slot, occupies that batch
+row for as many engine steps as it needs, and is retired per-slot the moment it
+completes; the freed row re-fills from the queue at the top of the next step.
+No barrier on the slowest request: a long-running slot never blocks short
+requests flowing through the other rows.
+
+The pool is engine-agnostic: items are opaque (LM prompts, TNN volley streams),
+and the pool only does bookkeeping — admission order, slot assignment, and
+wall-clock timestamps for the per-request latency accounting that
+:func:`latency_summary` aggregates.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import (
+    Callable,
+    Deque,
+    Dict,
+    Generic,
+    Iterable,
+    Iterator,
+    List,
+    Optional,
+    Tuple,
+    TypeVar,
+)
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass
+class SlotEntry(Generic[T]):
+    """One request's bookkeeping: payload, admission order, timestamps.
+
+    ``seq`` is the monotonically increasing submission index (FIFO ticket).
+    Timestamps are pool-clock seconds; ``admitted_at``/``retired_at`` stay at
+    0.0 until the corresponding transition happens.
+    """
+
+    item: T
+    seq: int
+    submitted_at: float
+    admitted_at: float = 0.0
+    retired_at: float = 0.0
+
+    @property
+    def wait_s(self) -> float:
+        """Queue wait: submission -> admission."""
+        return self.admitted_at - self.submitted_at
+
+    @property
+    def service_s(self) -> float:
+        """In-slot service time: admission -> retirement."""
+        return self.retired_at - self.admitted_at
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end latency: submission -> retirement."""
+        return self.retired_at - self.submitted_at
+
+
+class SlotPool(Generic[T]):
+    """Fixed pool of ``n_slots`` slots fed by a FIFO pending queue.
+
+    Deterministic scheduling contract (pinned by tests/test_serve_tnn.py):
+
+    * ``submit`` appends to the pending queue and assigns the next ``seq``.
+    * ``admit`` drains the queue into free slots, earliest submission into the
+      lowest free slot index, until slots or pending run out.
+    * ``retire(idx)`` frees a slot and returns its entry (timestamped).
+
+    Engines call ``admit`` at the top of every step, so a slot freed in step
+    ``s`` is re-filled in step ``s + 1`` — continuous batching.
+    """
+
+    def __init__(
+        self,
+        n_slots: int,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._clock = clock
+        self._slots: List[Optional[SlotEntry[T]]] = [None] * n_slots
+        self._pending: Deque[SlotEntry[T]] = collections.deque()
+        self._seq = 0
+        self.n_submitted = 0
+        self.n_retired = 0
+
+    def submit(self, item: T) -> SlotEntry[T]:
+        """Enqueue a request; returns its (shared, mutable) entry."""
+        entry = SlotEntry(item=item, seq=self._seq, submitted_at=self._clock())
+        self._seq += 1
+        self.n_submitted += 1
+        self._pending.append(entry)
+        return entry
+
+    def admit(self) -> List[Tuple[int, SlotEntry[T]]]:
+        """Fill free slots from the pending queue; returns new placements."""
+        admitted: List[Tuple[int, SlotEntry[T]]] = []
+        for idx in range(self.n_slots):
+            if not self._pending:
+                break
+            if self._slots[idx] is None:
+                entry = self._pending.popleft()
+                entry.admitted_at = self._clock()
+                self._slots[idx] = entry
+                admitted.append((idx, entry))
+        return admitted
+
+    def retire(self, idx: int) -> SlotEntry[T]:
+        """Free slot ``idx``; returns the timestamped entry."""
+        entry = self._slots[idx]
+        if entry is None:
+            raise ValueError(f"slot {idx} is empty")
+        entry.retired_at = self._clock()
+        self._slots[idx] = None
+        self.n_retired += 1
+        return entry
+
+    def live(self) -> Iterator[Tuple[int, SlotEntry[T]]]:
+        """(slot index, entry) for every occupied slot, ascending index."""
+        for idx, entry in enumerate(self._slots):
+            if entry is not None:
+                yield idx, entry
+
+    @property
+    def n_live(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def has_work(self) -> bool:
+        """Anything admitted or still queued?"""
+        return self.n_live > 0 or self.n_pending > 0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slots currently occupied."""
+        return self.n_live / self.n_slots
+
+
+def latency_summary(entries: Iterable[SlotEntry]) -> Dict[str, float]:
+    """Aggregate per-request latency stats over retired entries.
+
+    Returns mean/p50/p95/max of end-to-end latency plus mean queue-wait and
+    mean service time, all in milliseconds ({} for no entries).
+    """
+    done = [e for e in entries if e.retired_at > 0.0]
+    if not done:
+        return {}
+    lat = sorted(e.latency_s for e in done)
+    n = len(lat)
+    return {
+        "n": float(n),
+        "latency_ms_mean": 1e3 * sum(lat) / n,
+        "latency_ms_p50": 1e3 * lat[n // 2],
+        "latency_ms_p95": 1e3 * lat[min(n - 1, (95 * n) // 100)],
+        "latency_ms_max": 1e3 * lat[-1],
+        "wait_ms_mean": 1e3 * sum(e.wait_s for e in done) / n,
+        "service_ms_mean": 1e3 * sum(e.service_s for e in done) / n,
+    }

@@ -1,0 +1,265 @@
+"""Slot-based TNN inference engine: volley batching over decode-style slots.
+
+Serves TNN inference to many concurrent clients the way the LM engine serves
+decode tokens (DESIGN.md §5.3). A *request* is a client's stream of encoded
+spike volleys (``core/coding.py``: ``value_to_time`` / ``grf_encode``), one
+volley per gamma cycle. Requests are admitted into a fixed pool of B slots
+(:class:`repro.serve.slots.SlotPool`); each engine step stacks the live slots'
+next volleys into the ``(B, n_inputs)`` batch that ``TNNLayer``/``TNNNetwork``
+already vectorize over, runs one jit-compiled ``network_forward`` — every
+neuron evaluated through the backend-dispatched ``fire_times_bank`` (scan /
+closed_form / pallas / auto) — and scatters the ``(B, C, Q)`` output spike
+times back to the slots. A request retires the moment its stream is exhausted;
+its slot re-fills from the pending queue at the top of the next step. No
+barrier on the slowest request.
+
+Empty slots carry all-``NO_SPIKE`` volleys: silent lines never fire a neuron,
+so padding rows are inert, and the batch shape stays static — one XLA
+compilation per (B, network) pair. Everything is int32 end to end, so engine
+outputs are bit-exact against unbatched per-request ``network_forward`` calls
+regardless of batch composition (pinned by tests/test_serve_tnn.py).
+
+Front doors:
+
+* :meth:`TNNEngine.serve` — synchronous: submit a list of volley streams,
+  drain the pool, get results in submission order.
+* :class:`AsyncTNNEngine` — ``asyncio``: concurrent clients ``await
+  engine.submit(stream)``; a pump task steps the shared pool and resolves each
+  client's future on retirement.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coding, network, neuron
+from repro.serve import slots
+
+NO_SPIKE = int(coding.NO_SPIKE)
+
+
+@dataclasses.dataclass
+class TNNServeConfig:
+    """Engine knobs: slot count (= batch rows) and neuron-bank backend."""
+
+    n_slots: int = 8
+    #: fire_times_bank engine for every layer: scan | closed_form | pallas |
+    #: auto (pallas on TPU, closed form elsewhere).
+    backend: neuron.Backend = "auto"
+
+
+@dataclasses.dataclass
+class TNNRequest:
+    """One client's stream of volleys and its accumulated outputs."""
+
+    req_id: int
+    volleys: np.ndarray  # (n_cycles, n_inputs) int32 spike times
+    outputs: List[np.ndarray] = dataclasses.field(default_factory=list)
+    cursor: int = 0
+
+    @property
+    def n_cycles(self) -> int:
+        return int(self.volleys.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.cursor >= self.n_cycles
+
+    def result(self) -> np.ndarray:
+        """(n_cycles, C_last, Q_last) int32 post-WTA output spike times."""
+        return np.stack(self.outputs, axis=0)
+
+
+class TNNEngine:
+    """Slot-based volley batching over a trained :class:`TNNNetwork`.
+
+    Admission → batch → fire → retire, one gamma cycle per step:
+
+    1. ``admit``: free slots re-fill FIFO from the pending queue.
+    2. ``batch``: live slots contribute their next volley; empty rows are
+       all-``NO_SPIKE`` (inert).
+    3. ``fire``: one jit ``network_forward`` over ``(B, n_inputs)``.
+    4. ``retire``: exhausted requests leave their slots immediately.
+    """
+
+    def __init__(
+        self,
+        params: Sequence[jax.Array],
+        net: network.TNNNetwork,
+        scfg: Optional[TNNServeConfig] = None,
+    ):
+        scfg = scfg or TNNServeConfig()
+        if scfg.backend != "auto":
+            net = network.make_network(
+                [dataclasses.replace(lc, backend=scfg.backend) for lc in net.layers]
+            )
+        self.net = net
+        self.scfg = scfg
+        self.params = tuple(jnp.asarray(p) for p in params)
+        self.pool: slots.SlotPool[TNNRequest] = slots.SlotPool(scfg.n_slots)
+        self._fwd = jax.jit(lambda p, v: network.network_forward(p, v, net)[0])
+        self._next_id = 0
+        # timestamp-only entries (item=None) — see step()
+        self._retired: List[slots.SlotEntry] = []
+        self.n_steps = 0
+        self.n_volleys = 0
+        self._run_s = 0.0
+
+    def reset_stats(self) -> None:
+        """Zero the throughput/latency accounting (e.g. after jit warmup);
+        pending/live requests and the compiled step are untouched."""
+        self._retired.clear()
+        self.n_steps = 0
+        self.n_volleys = 0
+        self._run_s = 0.0
+        self.pool.n_retired = 0
+        self.pool.n_submitted = self.pool.n_live + self.pool.n_pending
+
+    def submit(self, volleys: np.ndarray) -> TNNRequest:
+        """Enqueue one request: ``(n_cycles, n_inputs)`` int32 spike times
+        (a single ``(n_inputs,)`` volley is promoted to one cycle)."""
+        volleys = np.asarray(volleys, np.int32)
+        if volleys.ndim == 1:
+            volleys = volleys[None, :]
+        if volleys.ndim != 2 or volleys.shape[1] != self.net.n_inputs:
+            raise ValueError(
+                f"expected (n_cycles, {self.net.n_inputs}) volleys, got {volleys.shape}"
+            )
+        if volleys.shape[0] == 0:
+            raise ValueError("empty volley stream")
+        req = TNNRequest(req_id=self._next_id, volleys=volleys)
+        self._next_id += 1
+        self.pool.submit(req)
+        return req
+
+    def step(self) -> List[TNNRequest]:
+        """One gamma cycle for every live slot; returns requests retired
+        this step (in ascending slot order)."""
+        t0 = time.perf_counter()
+        self.pool.admit()
+        live = list(self.pool.live())
+        if not live:
+            return []
+        batch = np.full((self.scfg.n_slots, self.net.n_inputs), NO_SPIKE, np.int32)
+        for idx, entry in live:
+            req = entry.item
+            batch[idx] = req.volleys[req.cursor]
+        out = np.asarray(self._fwd(self.params, jnp.asarray(batch)))
+        retired: List[TNNRequest] = []
+        for idx, entry in live:
+            req = entry.item
+            # copy: out[idx] is a view that would pin the whole (B, C, Q)
+            # batch array for the life of the request
+            req.outputs.append(out[idx].copy())
+            req.cursor += 1
+            if req.done:
+                done_entry = self.pool.retire(idx)
+                # keep only the timestamps for the latency summary — holding
+                # the request (volleys + outputs) would grow without bound
+                # in a long-lived service
+                self._retired.append(dataclasses.replace(done_entry, item=None))
+                retired.append(req)
+        self.n_steps += 1
+        self.n_volleys += len(live)
+        self._run_s += time.perf_counter() - t0
+        return retired
+
+    def run(self) -> List[TNNRequest]:
+        """Drain pending + live work; returns requests in completion order."""
+        finished: List[TNNRequest] = []
+        while self.pool.has_work:
+            finished.extend(self.step())
+        return finished
+
+    def serve(self, streams: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Synchronous front door: results in submission order."""
+        reqs = [self.submit(s) for s in streams]
+        self.run()
+        return [r.result() for r in reqs]
+
+    def stats(self) -> Dict[str, float]:
+        """Throughput + occupancy + per-request latency summary."""
+        out = {
+            "n_steps": float(self.n_steps),
+            "n_volleys": float(self.n_volleys),
+            "n_retired": float(self.pool.n_retired),
+            "run_s": self._run_s,
+        }
+        if self._run_s > 0.0:
+            out["volleys_per_s"] = self.n_volleys / self._run_s
+        if self.n_steps > 0:
+            denom = self.n_steps * self.scfg.n_slots
+            out["slot_occupancy"] = self.n_volleys / denom
+        out.update(slots.latency_summary(self._retired))
+        return out
+
+
+class AsyncTNNEngine:
+    """``asyncio`` front door over a shared :class:`TNNEngine`.
+
+    Clients ``await submit(stream)`` concurrently; a single pump task steps
+    the engine while work remains, resolving each request's future when it
+    retires. The step itself is synchronous compute (one jit call), so the
+    pump yields control between steps — admission stays continuous under
+    concurrent submission bursts.
+    """
+
+    def __init__(self, engine: TNNEngine):
+        self.engine = engine
+        self._futures: Dict[int, asyncio.Future] = {}
+        self._pump_task: Optional[asyncio.Task] = None
+
+    async def submit(self, volleys: np.ndarray) -> np.ndarray:
+        """Submit one stream; resolves to its (n_cycles, C, Q) output."""
+        req = self.engine.submit(volleys)
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[req.req_id] = fut
+        self._ensure_pump()
+        return await fut
+
+    def _ensure_pump(self) -> None:
+        if self._pump_task is None or self._pump_task.done():
+            self._pump_task = asyncio.get_running_loop().create_task(self._pump())
+
+    async def _pump(self) -> None:
+        try:
+            while self.engine.pool.has_work:
+                for req in self.engine.step():
+                    fut = self._futures.pop(req.req_id, None)
+                    if fut is not None and not fut.done():
+                        fut.set_result(req.result())
+                # yield so freshly woken clients can enqueue before next admit
+                await asyncio.sleep(0)
+        except Exception as exc:
+            # a dead pump must not strand awaiting clients: fail them all.
+            # No re-raise — every request holds a future, so the error is
+            # fully delivered; re-raising would only produce an unretrieved
+            # task exception at GC (the pump task is never awaited).
+            for fut in self._futures.values():
+                if not fut.done():
+                    fut.set_exception(exc)
+            self._futures.clear()
+
+
+def reference_outputs(
+    params: Sequence[jax.Array],
+    net: network.TNNNetwork,
+    stream: np.ndarray,
+) -> np.ndarray:
+    """Unbatched oracle: each volley through ``network_forward`` alone.
+
+    The bit-exactness target for the slot engine (and the honest
+    per-request baseline for the serving benchmark).
+    """
+    outs: List[np.ndarray] = []
+    for volley in np.asarray(stream, np.int32):
+        out, _ = network.network_forward(tuple(params), jnp.asarray(volley), net)
+        outs.append(np.asarray(out))
+    return np.stack(outs, axis=0)

@@ -20,7 +20,7 @@ Stacked-layer leaves (leading L axis from scan) get a leading ``None``.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 import numpy as np

@@ -12,6 +12,8 @@ leaving every plain/parametrized test in the module runnable.
 
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

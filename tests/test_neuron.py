@@ -4,7 +4,6 @@ under the sparsity condition; clipping semantics beyond it."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import coding, neuron
 

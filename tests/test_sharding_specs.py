@@ -3,8 +3,6 @@ a 1x1 mesh exercises the rule structure; divisibility fallbacks are
 checked against a mocked mesh shape)."""
 
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding import specs as SH
