@@ -13,8 +13,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (emit, reset_results, smoke_mode, time_fn,
-                               write_json)
+from benchmarks.common import (emit, note_meta, reset_results, smoke_mode,
+                               spike_density, time_fn, write_json)
 from repro.core import coding, layer, unary_ops
 from repro.core.topk_prune import topk_network
 from repro.kernels import ref
@@ -57,6 +57,7 @@ def main(smoke: bool = False) -> None:
     bsz = 8 if smoke else 64
     raw = jax.random.randint(key, (bsz, lcfg.n_inputs), 0, 48)
     volleys = jnp.where(raw >= 32, coding.NO_SPIKE, raw)
+    note_meta(input_spike_density=spike_density(volleys))
     for backend in ("closed_form", "pallas"):
         cfg_b = dataclasses.replace(lcfg, backend=backend)
         f_layer = jax.jit(lambda v, c=cfg_b: layer.layer_forward(

@@ -1,0 +1,132 @@
+"""Sparsity sweep: neuron-bank engines vs input spike density.
+
+The paper's premise is that only a small subset of dendritic inputs carry
+spikes per gamma cycle; this bench measures how much the software engines
+actually win from that. For a paper-scale bank (n=64 lines, T=64 ticks,
+B=64 volleys x Q=64 neurons, Catwalk k=2) it sweeps the per-volley density
+s/n over {1/32 .. 1} x engine and reports wall time per bank evaluation:
+
+  * ``closed_form``     — dense O(B·Q·T·n), sparsity-blind baseline.
+  * ``event``           — sorted-breakpoint solve, O(B·Q·s log s),
+    t_steps-independent (spike-compacted: the sorted width tracks s).
+  * ``event_nc``        — the same solve without the compaction pre-pass
+    (what jit-traced callers get); isolates the relocation win.
+  * ``scan``            — cycle-accurate tick scan (context; --full only).
+  * ``pallas_compact``  — spike-compacted kernel; CPU runs the interpreter
+    (plumbing validation, not speed), so it is opt-in via --with-pallas.
+
+Each row carries its density so the artifact is self-describing; the JSON
+metadata block records the sweep grid (see benchmarks/common.py).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_sparsity [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (emit, note_meta, reset_results, smoke_mode,
+                               spike_density, time_fn, write_json)
+from repro.core import coding, compaction, neuron
+
+DENSITIES = (1 / 32, 1 / 16, 1 / 8, 1 / 4, 1 / 2, 1.0)
+
+
+def sparse_volleys(rng: np.random.Generator, bsz: int, n: int, t_max: int,
+                   density: float) -> jnp.ndarray:
+    """(B, n) volleys with exactly round(density * n) spiking lines each."""
+    s = max(int(round(density * n)), 1)
+    times = np.full((bsz, n), int(coding.NO_SPIKE), np.int64)
+    for b in range(bsz):
+        lines = rng.choice(n, size=s, replace=False)
+        times[b, lines] = rng.integers(0, t_max, size=s)
+    return jnp.asarray(times, jnp.int32)
+
+
+def main(smoke: bool = False, full: bool = False,
+         with_pallas: bool = False) -> None:
+    smoke = smoke or smoke_mode()
+    reset_results()
+    if smoke:
+        bsz = qsz = 8
+        n, t_steps = 16, 16
+        densities = (1 / 8, 1 / 2)
+        iters = 2
+    else:
+        bsz = qsz = 64          # paper-scale bank (acceptance shape)
+        n, t_steps = 64, 64
+        densities = DENSITIES
+        iters = 10
+    threshold, k = 9, 2
+    cfg = neuron.NeuronConfig(n_inputs=n, threshold=threshold,
+                              t_steps=t_steps, dendrite="catwalk", k=k)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(0, 8, (qsz, n)), jnp.int32)
+    note_meta(bank_shape=f"B{bsz}xQ{qsz}xn{n}xT{t_steps}",
+              densities=list(densities), dendrite="catwalk", k=k)
+
+    backends = ["closed_form", "event", "event_nc"]
+    if full:
+        backends.append("scan")
+    if with_pallas:
+        backends.append("pallas_compact")
+
+    def bank_fn(backend: str, times):
+        if backend == "event_nc":
+            # jit the uncompacted solve: what a traced caller (the serve
+            # engine's jit step) gets — sorts 2n events instead of 2s
+            return jax.jit(functools.partial(
+                neuron.fire_times_bank, weights=w, cfg=cfg,
+                backend="event"))
+        if backend == "event":
+            # production shape: measure the batch's active width host-side
+            # once, bucket it, and jit the compacted solve with that static
+            # width (compaction + breakpoint sort both inside the jit)
+            width = compaction.bucket_width(
+                compaction.max_active(times, cfg.t_steps))
+            return jax.jit(functools.partial(
+                neuron.fire_times_bank, weights=w, cfg=cfg,
+                backend="event", n_active_max=width))
+        if backend == "pallas_compact":
+            return functools.partial(neuron.fire_times_bank, weights=w,
+                                     cfg=cfg, backend="pallas_compact")
+        return jax.jit(functools.partial(neuron.fire_times_bank, weights=w,
+                                         cfg=cfg, backend=backend))
+
+    for density in densities:
+        times = sparse_volleys(rng, bsz, n, t_steps, density)
+        measured = spike_density(np.asarray(times))
+        ref = np.asarray(neuron.fire_times_bank(times, w, cfg,
+                                                backend="closed_form"))
+        base_us = None
+        for backend in backends:
+            fn = bank_fn(backend, times)
+            got = np.asarray(fn(times))
+            if not np.array_equal(got, ref):  # engines must stay bit-exact
+                raise AssertionError(
+                    f"{backend} diverges from closed_form at d={density}")
+            us = time_fn(fn, times, iters=iters)
+            if backend == "closed_form":
+                base_us = us
+            speedup = base_us / us if base_us else 0.0
+            emit(f"sparsity/d{density:.3f}_{backend}", us,
+                 f"{speedup:.1f}x_vs_closed_form",
+                 density=measured, backend=backend)
+    write_json("sparsity", smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI plumbing validation")
+    ap.add_argument("--full", action="store_true",
+                    help="also bench the (slow) tick scan")
+    ap.add_argument("--with-pallas", action="store_true",
+                    help="include the interpret-mode pallas_compact path")
+    args = ap.parse_args()
+    main(smoke=args.smoke, full=args.full, with_pallas=args.with_pallas)

@@ -2,8 +2,10 @@
 
 Every ``emit`` prints the historical ``name,us|value,derived`` CSV line AND
 records the row in-process; ``write_json`` dumps the accumulated rows (plus
-environment metadata) to ``BENCH_<name>.json`` so CI can upload them as
-artifacts and the perf trajectory accumulates run over run.
+environment metadata and any ``note_meta`` keys — notably the input spike
+density, so sparsity sweeps are self-describing) to ``BENCH_<name>.json`` so
+CI can upload them as artifacts and the perf trajectory accumulates run over
+run (``benchmarks/trend.py`` diffs consecutive runs).
 
 Smoke mode (``--smoke`` flags or ``REPRO_BENCH_SMOKE=1``) shrinks problem
 sizes/iterations so the whole bench suite validates plumbing in seconds on a
@@ -19,6 +21,29 @@ import time
 import jax
 
 _RESULTS = []
+_METADATA = {}
+
+#: NO_SPIKE sentinel (mirrors repro.core.coding.NO_SPIKE; kept standalone so
+#: this plumbing module needs no repro import).
+NO_SPIKE = 2 ** 30
+
+
+def spike_density(times) -> float:
+    """Fraction of non-NO_SPIKE lines in a volley batch (any shape).
+
+    The self-describing sparsity number every bench records in its
+    BENCH_*.json metadata block (see :func:`note_meta`), so density sweeps
+    and cross-run comparisons know what workload shape they measured.
+    """
+    import numpy as np
+    t = np.asarray(times)
+    return float((t < NO_SPIKE).mean()) if t.size else 0.0
+
+
+def note_meta(**kwargs) -> None:
+    """Attach key/value metadata to the next :func:`write_json` artifact
+    (e.g. ``note_meta(input_spike_density=0.12)``)."""
+    _METADATA.update(kwargs)
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
@@ -36,10 +61,12 @@ def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call, derived: str = "") -> None:
-    _RESULTS.append({"name": name,
-                     "us_per_call": us_per_call,
-                     "derived": derived})
+def emit(name: str, us_per_call, derived: str = "", **extra) -> None:
+    """Print the CSV line and buffer the row; ``extra`` keys (e.g. a row's
+    input density) are carried verbatim into the JSON artifact."""
+    row = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    row.update(extra)
+    _RESULTS.append(row)
     if isinstance(us_per_call, float):
         us_per_call = f"{us_per_call:.2f}"
     print(f"{name},{us_per_call},{derived}")
@@ -51,10 +78,11 @@ def smoke_mode() -> bool:
 
 
 def reset_results() -> None:
-    """Drop buffered rows. JSON-emitting bench mains call this first so
-    rows printed earlier in the same process (benchmarks/run.py runs
-    several sections back to back) don't leak into their artifact."""
+    """Drop buffered rows + metadata. JSON-emitting bench mains call this
+    first so rows printed earlier in the same process (benchmarks/run.py
+    runs several sections back to back) don't leak into their artifact."""
     _RESULTS.clear()
+    _METADATA.clear()
 
 
 def write_json(bench: str, out_dir: str = None, smoke: bool = None) -> str:
@@ -71,6 +99,8 @@ def write_json(bench: str, out_dir: str = None, smoke: bool = None) -> str:
     path = os.path.join(out_dir, f"BENCH_{bench}.json")
     rows = list(_RESULTS)
     _RESULTS.clear()
+    metadata = dict(_METADATA)
+    _METADATA.clear()
     payload = {
         "bench": bench,
         "smoke": smoke_mode() if smoke is None else smoke,
@@ -78,6 +108,7 @@ def write_json(bench: str, out_dir: str = None, smoke: bool = None) -> str:
         "jax_version": jax.__version__,
         "jax_backend": jax.default_backend(),
         "platform": platform.platform(),
+        "metadata": metadata,
         "results": rows,
     }
     with open(path, "w") as f:

@@ -6,6 +6,7 @@ Prints ``name,us_per_call|value,derived`` CSV. Sections:
   * table1     — P&R reproduction + headline ratios + mean error
   * clip       — beyond-paper accuracy-under-clipping study
   * kernels    — kernel microbenches (CPU; TPU numbers come from §Roofline)
+  * sparsity   — neuron-bank engines vs input spike density (DESIGN.md §3.3)
   * roofline   — per-cell roofline fractions from the dry-run artifacts
 """
 
@@ -13,11 +14,12 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, clipping_study, paper_tables,
-                            roofline_table)
+    from benchmarks import (bench_kernels, bench_sparsity, clipping_study,
+                            paper_tables, roofline_table)
     paper_tables.main()
     clipping_study.main()
     bench_kernels.main()
+    bench_sparsity.main()
     roofline_table.main()
 
 

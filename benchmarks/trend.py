@@ -1,0 +1,128 @@
+"""Bench-trend diff: compare two directories of BENCH_*.json artifacts.
+
+CI's warn-only regression gate (`.github/workflows/ci.yml`, bench-trend
+job): the previous successful run's artifacts land in one directory, the
+current run's in another, and this script matches rows by ``name`` within
+each bench file and reports the per-row wall-time delta as a markdown
+table (suitable for ``$GITHUB_STEP_SUMMARY``).
+
+Exit code is always 0 unless ``--strict`` is given (then regressions
+beyond the threshold fail) — smoke-mode CI timings on shared runners are
+too noisy for a hard gate until several runs have accumulated; rows from a
+smoke artifact are marked as such and held to no gate at all.
+
+Run:  python benchmarks/trend.py <previous_dir> <current_dir>
+          [--threshold 0.25] [--strict]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_dir(path: str) -> dict:
+    """{bench name: payload} for every BENCH_*.json under ``path``."""
+    out = {}
+    for fp in sorted(glob.glob(os.path.join(path, "**", "BENCH_*.json"),
+                               recursive=True)):
+        try:
+            with open(fp) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"warning: skipping unreadable {fp}: {exc}",
+                  file=sys.stderr)
+            continue
+        out[payload.get("bench", os.path.basename(fp))] = payload
+    return out
+
+
+def numeric_rows(payload: dict) -> dict:
+    """{row name: us_per_call} for rows with a numeric timing."""
+    rows = {}
+    for row in payload.get("results", []):
+        us = row.get("us_per_call")
+        if isinstance(us, (int, float)) and not isinstance(us, bool):
+            rows[row["name"]] = float(us)
+    return rows
+
+
+def compare(prev: dict, cur: dict, threshold: float):
+    """Yield (bench, row, prev_us, cur_us, delta_frac, flag) tuples.
+
+    ``delta_frac`` > 0 means the current run is slower. ``flag`` is
+    "regression" past the threshold, "improvement" past it the other way,
+    "" otherwise; smoke artifacts get "(smoke)" appended — noise, not
+    signal.
+    """
+    for bench in sorted(set(prev) & set(cur)):
+        p_rows, c_rows = numeric_rows(prev[bench]), numeric_rows(cur[bench])
+        smoke = bool(prev[bench].get("smoke") or cur[bench].get("smoke"))
+        for name in sorted(set(p_rows) & set(c_rows)):
+            p_us, c_us = p_rows[name], c_rows[name]
+            if p_us <= 0:
+                continue
+            delta = (c_us - p_us) / p_us
+            flag = ""
+            if delta >= threshold:
+                flag = "regression"
+            elif delta <= -threshold:
+                flag = "improvement"
+            if smoke and flag:
+                flag += " (smoke)"
+            yield bench, name, p_us, c_us, delta, flag
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("previous", help="dir with the previous run's artifacts")
+    ap.add_argument("current", help="dir with the current run's artifacts")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional slowdown that counts as a regression")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on non-smoke regressions (future hard "
+                         "gate; default is warn-only)")
+    args = ap.parse_args(argv)
+
+    prev = load_dir(args.previous)
+    cur = load_dir(args.current)
+    if not prev:
+        print(f"no previous BENCH_*.json under {args.previous!r} — "
+              "nothing to compare (first tracked run?)")
+        return 0
+    if not cur:
+        print(f"no current BENCH_*.json under {args.current!r}")
+        return 0
+
+    rows = list(compare(prev, cur, args.threshold))
+    print("### Benchmark trend vs previous run\n")
+    if not rows:
+        print("no overlapping benchmark rows between runs")
+        return 0
+    print("| bench | row | prev us | cur us | delta | |")
+    print("|---|---|---:|---:|---:|---|")
+    regressions = 0
+    for bench, name, p_us, c_us, delta, flag in rows:
+        if flag.startswith("regression") and "smoke" not in flag:
+            regressions += 1
+        mark = {"regression": "⚠️", "improvement": "✅"}.get(
+            flag.split(" ")[0], "")
+        print(f"| {bench} | {name} | {p_us:.1f} | {c_us:.1f} | "
+              f"{delta:+.0%} | {mark} {flag} |")
+    missing = [b for b in prev if b not in cur]
+    if missing:
+        print(f"\nbenches present previously but missing now: "
+              f"{', '.join(sorted(missing))}")
+    if regressions:
+        print(f"\n{regressions} non-smoke regression(s) past "
+              f"{args.threshold:.0%} (warn-only gate)")
+        if args.strict:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,10 @@ continuous re-fill, every gamma cycle one batched ``network_forward`` over
 the live slots (backend-dispatched ``fire_times_bank``).
 
 Verifies the engine's spike-time outputs are bit-exact against unbatched
-per-request ``TNNNetwork`` inference, then prints throughput/latency stats.
+per-request ``TNNNetwork`` inference, then prints per-request measured
+spike density, the neuron-bank engine the ``auto`` density policy resolved
+each request's cycles to (sparse batches take the event engine's
+breakpoint solve — DESIGN.md §3.3), and throughput/latency stats.
 
 Run:  PYTHONPATH=src python examples/serve_tnn.py [--clients 64 --slots 8]
 """
@@ -51,7 +54,8 @@ def main():
     ap.add_argument("--clients", type=int, default=64)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "scan", "closed_form", "pallas"])
+                    choices=["auto", "scan", "closed_form", "event",
+                             "pallas"])
     args = ap.parse_args()
 
     net = build_network()
@@ -66,7 +70,9 @@ def main():
     eng = tnn_engine.TNNEngine(
         params, net,
         tnn_engine.TNNServeConfig(n_slots=args.slots, backend=args.backend))
-    results = eng.serve(streams)
+    reqs = [eng.submit(s) for s in streams]
+    eng.run()
+    results = [r.result() for r in reqs]
 
     mismatches = 0
     for stream, result in zip(streams, results):
@@ -74,8 +80,24 @@ def main():
         if not np.array_equal(ref, result):
             mismatches += 1
     st = eng.stats()
+    # show the sparse path engaging: measured per-request density and the
+    # engine the auto policy actually resolved each request's cycles to
+    for req in reqs[:8]:
+        served = "+".join(sorted(req.backends))
+        print(f"  req {req.req_id:3d}: {req.n_cycles} cycles, "
+              f"density {req.density:.2f} -> {served}")
+    if len(reqs) > 8:
+        print(f"  ... ({len(reqs) - 8} more requests)")
+    per_layer = network.measured_densities(params, streams[0], net)
+    dens = " -> ".join(f"{d:.2f}" for d in per_layer)
+    policy = ", ".join(f"{k[len('steps_'):]}:{int(v)}"
+                       for k, v in sorted(st.items())
+                       if k.startswith("steps_"))
+    print(f"layer input densities (req 0): {dens}")
     print(f"steps={int(st['n_steps'])}  "
           f"occupancy={st['slot_occupancy']:.2f}  "
+          f"batch density={st['density_mean']:.2f}  "
+          f"backend steps: {policy}  "
           f"throughput={st.get('volleys_per_s', 0.0):.0f} volleys/s")
     print(f"latency ms: mean={st['latency_ms_mean']:.1f} "
           f"p50={st['latency_ms_p50']:.1f} p95={st['latency_ms_p95']:.1f} "

@@ -31,7 +31,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import coding, neuron, stdp
+from repro.core import coding, compaction, neuron, stdp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +49,16 @@ class TNNLayer:
     #: receptive-field stride between adjacent columns; None = rf_size
     #: (disjoint windows). rf_stride < rf_size gives overlapping fields.
     rf_stride: Optional[int] = None
+    #: neuron-bank engine (DESIGN.md §2/§3.3): the sparse engines ("event",
+    #: "pallas_compact") compact the post-gather (C, B, rf) tensor in ONE
+    #: call inside fire_times_bank, so one relocation serves all columns.
     backend: neuron.Backend = "auto"
+    #: static compaction width for the sparse engines under jit (§3.3):
+    #: active lines per (column, volley) after the receptive-field gather.
+    #: None = measured with concrete inputs, uncompacted solve when traced.
+    #: Traced callers must guarantee it covers the batch (the serve engine
+    #: measures + buckets host-side; see network.sparse_widths).
+    n_active_max: Optional[int] = None
     stdp: stdp.STDPConfig = dataclasses.field(default_factory=stdp.STDPConfig)
     #: minibatch STDP reduction: "mean" (default) or "sum".
     stdp_reduction: str = "mean"
@@ -101,6 +110,20 @@ def _gather_rf(volleys: jax.Array, cfg: TNNLayer) -> jax.Array:
     return jnp.swapaxes(rf, 0, 1)             # (C, B, rf)
 
 
+def layer_input_density(volleys: jax.Array, cfg: TNNLayer):
+    """Measured fraction of contributing lines across the layer's
+    receptive fields (host diagnostic; ``None`` under jit).
+
+    Overlapping fields count shared lines once per column — this is the
+    density the neuron banks actually see, the quantity the ``auto``
+    backend policy branches on (:func:`repro.core.neuron.resolve_backend`).
+    """
+    if isinstance(volleys, jax.core.Tracer):
+        return None
+    v = volleys[None, :] if volleys.ndim == 1 else volleys
+    return compaction.measured_density(_gather_rf(v, cfg), cfg.t_steps)
+
+
 def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer
                   ) -> Tuple[jax.Array, jax.Array]:
     """Run one gamma cycle for a batch of volleys.
@@ -120,7 +143,8 @@ def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer
     w_int = jnp.round(weights).astype(jnp.int32)
     times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
     fire = neuron.fire_times_bank(times_rf, w_int, cfg.neuron_config(),
-                                  backend=cfg.backend)        # (C, B, Q)
+                                  backend=cfg.backend,
+                                  n_active_max=cfg.n_active_max)  # (C, B, Q)
     fire = jnp.swapaxes(fire, 0, 1)                           # (B, C, Q)
     # vectorized 1-WTA over the (B, C) plane; argmin's first-minimum rule
     # is the tie-break-to-lowest-index priority encoder.

@@ -85,6 +85,45 @@ def network_forward(params: Sequence[jax.Array], volleys: jax.Array,
     return out, tuple(winners_all)
 
 
+def measured_densities(params: Sequence[jax.Array], volleys: jax.Array,
+                       cfg: TNNNetwork):
+    """Per-layer measured input densities for one concrete batch.
+
+    Runs the stack layer by layer and records the fraction of contributing
+    lines each layer's neuron banks see — layer 0 reflects the input
+    encoding's sparsity, deeper layers the 1-WTA thinning (at most one hot
+    line per column, so density <= 1/n_neurons there). Host diagnostic for
+    the serving demo and the ``auto`` backend policy; requires concrete
+    inputs (returns ``None`` entries under jit).
+    """
+    x = volleys[None, :] if volleys.ndim == 1 else volleys
+    densities = []
+    for w, lc in zip(params, cfg.layers):
+        densities.append(layer_mod.layer_input_density(x, lc))
+        out, _ = layer_mod.layer_forward(w, x, lc)
+        x = out.reshape(out.shape[0], lc.n_outputs)
+    return densities
+
+
+def sparse_widths(cfg: TNNNetwork, first: int) -> Tuple[int, ...]:
+    """Static per-layer compaction widths for a jitted sparse stack (§3.3).
+
+    Layer 0 gets ``first`` — the caller's measured-and-bucketed active-line
+    bound for its receptive-field gather (the serve engine computes it
+    host-side per step; see :func:`repro.core.compaction.bucket_width`).
+    Deeper layers need no measurement: layer l consumes layer l-1's
+    post-WTA lines, at most one active per block of ``Q_prev``, so an
+    ``rf``-wide window covers at most ``(rf - 2) // Q_prev + 2`` blocks —
+    a structural bound that can never drop an active line.
+    """
+    widths = [max(int(first), 1)]
+    for prev, cur in zip(cfg.layers, cfg.layers[1:]):
+        q, rf = prev.n_neurons, cur.rf_size
+        bound = 1 if rf <= 1 else min(rf, (rf - 2) // q + 2, prev.n_columns)
+        widths.append(max(bound, 1))
+    return tuple(widths)
+
+
 def network_step(params: Sequence[jax.Array], volleys: jax.Array,
                  cfg: TNNNetwork, key: Optional[jax.Array] = None
                  ) -> Tuple[Tuple[jax.Array, ...], jax.Array,

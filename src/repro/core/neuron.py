@@ -28,7 +28,10 @@ the sparsity condition the paper leverages. ``simulate_neuron`` exposes a
 
 Everything is vmap/jit friendly; the scan version is the cycle-accurate
 hardware mirror, and closed-form fast paths are provided for training-scale
-use. The Pallas kernel (kernels/rnl_neuron.py) fuses steps 1-3.
+use. The event engine (:func:`fire_times_event`) exploits spike sparsity —
+O(s log s) in the s active lines, independent of ``t_steps`` — and the
+Pallas kernel (kernels/rnl_neuron.py) fuses steps 1-3, optionally over
+spike-compacted volleys (core/compaction.py).
 """
 
 from __future__ import annotations
@@ -39,12 +42,18 @@ from typing import Literal, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import coding, unary_ops
+from repro.core import coding, compaction, unary_ops
 from repro.core.topk_prune import topk_network
 
 DendriteKind = Literal["pc_conventional", "pc_compact", "sorting_pc", "catwalk"]
 
-Backend = Literal["auto", "scan", "closed_form", "pallas"]
+Backend = Literal["auto", "scan", "closed_form", "event", "pallas",
+                  "pallas_compact"]
+
+#: ``auto`` picks the event engine off-TPU when the measured fraction of
+#: contributing input lines is at or below this (DESIGN.md §3.3 decision
+#: table). Above it the dense closed form's vectorization wins.
+DENSITY_EVENT_MAX = 0.25
 
 #: Axon output pulse length in ticks (Fig. 4a: 8-cycle pulse counter).
 AXON_PULSE_TICKS = 8
@@ -175,8 +184,79 @@ def fire_time_catwalk_closed_form(times: jax.Array, weights: jax.Array,
     return jnp.where(any_hit, first, coding.NO_SPIKE)
 
 
+def fire_times_event(times: jax.Array, weights: jax.Array, threshold: int,
+                     t_steps: int, k: Optional[int] = None) -> jax.Array:
+    """Event-driven exact fire time: sorted-breakpoint segment solve.
+
+    The per-tick increment ``inc(t)`` — ``popcount(bits(t))``, or
+    ``min(popcount, k)`` for the clipped dendrites — only changes at the
+    *breakpoint* ticks ``{times[i], times[i] + w[i]}`` of the active lines
+    and is constant in between, so the potential is piecewise-linear in t.
+    Sorting the ≤2s breakpoints of the s active lines and cumsum-ing
+    segment contributions locates the first threshold crossing with one
+    ceil-division inside the crossing segment: O(s log s) per (volley,
+    neuron) pair, independent of ``t_steps``, bit-exact vs the tick scan
+    and the closed forms (DESIGN.md §3.3).
+
+    Args:
+      times, weights: broadcast-compatible (..., n) int32 pairs (silent
+        lines carry ``NO_SPIKE``; padded lines are inert).
+      threshold, t_steps, k: as in :class:`NeuronConfig` / :func:`clip_k`.
+
+    Returns:
+      (...,) int32 fire times (``NO_SPIKE`` = silent).
+    """
+    times = jnp.asarray(times).astype(jnp.int32)
+    weights = jnp.asarray(weights)
+    shape = jnp.broadcast_shapes(times.shape, weights.shape)
+    times = jnp.broadcast_to(times, shape)
+    w = jnp.broadcast_to(weights, shape).astype(jnp.int32)
+    batch_shape = times.shape[:-1]
+    if t_steps <= 0:
+        return jnp.full(batch_shape, coding.NO_SPIKE, jnp.int32)
+    if threshold <= 0:
+        # the scan fires at tick 0: potential 0 already meets threshold
+        return jnp.zeros(batch_shape, jnp.int32)
+    t_hi = jnp.int32(t_steps)
+    # breakpoints, clamped into the cycle window: a line's ramp turns on at
+    # times[i] and off at times[i]+w[i]; everything outside [0, T] collapses
+    # to zero-length segments and cancels (NO_SPIKE lines, w<=0 lines —
+    # whose ramp window [0, w) is empty in the scan, hence the floor at 0 —
+    # and ramps truncated by the cycle end).
+    on = jnp.clip(times, 0, t_hi)
+    off = jnp.clip(times + jnp.maximum(w, 0), 0, t_hi)
+    ev = jnp.concatenate([on, off], axis=-1)                   # (..., 2n)
+    delta = jnp.concatenate([jnp.ones_like(on), -jnp.ones_like(off)],
+                            axis=-1)
+    order = jnp.argsort(ev, axis=-1)
+    ev = jnp.take_along_axis(ev, order, axis=-1)
+    delta = jnp.take_along_axis(delta, order, axis=-1)
+    # active-line count over segment [ev_j, ev_{j+1}); transient negatives
+    # from -1 events sorting before +1 at the same tick only ever occur in
+    # zero-length segments — clamp so the arithmetic below stays safe
+    count = jnp.maximum(jnp.cumsum(delta, axis=-1), 0)
+    inc = count if k is None else jnp.minimum(count, k)
+    ends = jnp.concatenate(
+        [ev[..., 1:], jnp.full(ev.shape[:-1] + (1,), t_steps, jnp.int32)],
+        axis=-1)
+    seg = inc * (ends - ev)
+    p_end = jnp.cumsum(seg, axis=-1)        # potential at each segment end
+    hit = p_end >= threshold
+    any_hit = jnp.any(hit, axis=-1)
+    j = jnp.argmax(hit, axis=-1)[..., None]  # first crossing segment
+    p_start = jnp.take_along_axis(p_end - seg, j, axis=-1)[..., 0]
+    inc_j = jnp.take_along_axis(inc, j, axis=-1)[..., 0]
+    ev_j = jnp.take_along_axis(ev, j, axis=-1)[..., 0]
+    # first tick t in the segment with p_start + (t - ev_j + 1)*inc >= thr;
+    # inc_j > 0 is guaranteed at a genuine crossing (potential increased)
+    need = threshold - p_start
+    inc_safe = jnp.maximum(inc_j, 1)
+    fire = ev_j + (need + inc_safe - 1) // inc_safe - 1
+    return jnp.where(any_hit, fire, coding.NO_SPIKE)
+
+
 # --------------------------------------------------------------------------
-# Batched neuron-bank API: one signature, four engines (DESIGN.md §2).
+# Batched neuron-bank API: one signature, six engines (DESIGN.md §2).
 # --------------------------------------------------------------------------
 
 def clip_k(cfg: NeuronConfig) -> Optional[int]:
@@ -203,13 +283,24 @@ def pallas_available() -> bool:
         return False
 
 
-def resolve_backend(backend: Backend) -> str:
-    """``auto`` -> "pallas" when the kernel path is the fast one (TPU),
-    else the vectorized closed form; explicit names pass through."""
+def resolve_backend(backend: Backend, density: Optional[float] = None) -> str:
+    """Resolve ``auto`` to a concrete engine; explicit names pass through.
+
+    Policy (DESIGN.md §3.3 decision table): on TPU the fused Pallas kernel
+    is the fast path. Off-TPU, a *measured* input density at or below
+    :data:`DENSITY_EVENT_MAX` picks the event engine (its O(s log s)
+    breakpoint solve beats the dense O(T·n) closed form exactly when few
+    lines carry spikes); otherwise the vectorized closed form. ``density``
+    is the fraction of contributing lines (see
+    :func:`repro.core.compaction.measured_density`) — pass ``None`` when
+    unknown (e.g. under jit), which keeps the dense choice.
+    """
     if backend != "auto":
         return backend
     if jax.default_backend() == "tpu" and pallas_available():
         return "pallas"
+    if density is not None and density <= DENSITY_EVENT_MAX:
+        return "event"
     return "closed_form"
 
 
@@ -235,7 +326,8 @@ def _bank_shapes(times: jax.Array, weights: jax.Array):
 
 
 def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
-                    backend: Backend = "auto") -> jax.Array:
+                    backend: Backend = "auto",
+                    n_active_max: Optional[int] = None) -> jax.Array:
     """Fire times of a neuron bank: every volley through every neuron.
 
     This is the single entry point the column/layer stack builds on; all
@@ -244,11 +336,25 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
       * ``"scan"``        — cycle-accurate :func:`simulate_neuron` tick scan
         (the hardware mirror; honors ``cfg.gate_level``).
       * ``"closed_form"`` — vectorized time-parallel evaluation
-        (:func:`fire_time_closed_form` / :func:`fire_time_catwalk_closed_form`).
+        (:func:`fire_time_closed_form` / :func:`fire_time_catwalk_closed_form`),
+        O(T·n) per pair regardless of sparsity.
+      * ``"event"``       — sparsity-exploiting sorted-breakpoint solve
+        (:func:`fire_times_event`), O(s log s) per pair and independent of
+        ``t_steps``; composes with spike compaction
+        (:mod:`repro.core.compaction`) so the sorted width tracks the
+        active-line count, not ``n``.
       * ``"pallas"``      — fused TPU kernel
         (:func:`repro.kernels.rnl_neuron.rnl_fire_times`), one launch per
-        bank, or per column stack for 3-D inputs.
-      * ``"auto"``        — pallas on TPU, else the closed form.
+        bank, or per column stack for 3-D inputs; tick loop early-exits at
+        the batch's last breakpoint.
+      * ``"pallas_compact"`` — the same fused sweep over spike-compacted
+        volleys (:func:`repro.kernels.rnl_neuron.rnl_fire_times_compact`):
+        active lines relocated to a dense prefix of width ``n_active_max``
+        and weights gathered to match — the software analogue of the
+        paper's unary top-k relocation.
+      * ``"auto"``        — pallas on TPU; off-TPU the event engine when
+        the measured density is at most :data:`DENSITY_EVENT_MAX`, else
+        the closed form (:func:`resolve_backend`).
 
     Args:
       times:   (B, n) int32 spike volleys — or (C, B, n) for C independent
@@ -259,6 +365,12 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
         ``sorting_pc``/``catwalk`` the k-clipped dendrite (see
         :func:`clip_k`).
       backend: engine selection, see above.
+      n_active_max: static compaction width for the sparse engines. With
+        concrete inputs it is measured when omitted, and a forced width
+        that would drop active lines raises. Under jit the ``event``
+        engine falls back to the uncompacted (still T-independent) solve
+        and ``pallas_compact`` requires it — traced callers must guarantee
+        the width covers the batch (:func:`compaction.bucket_width`).
 
     Returns:
       (B, Q) int32 fire times (NO_SPIKE = silent), or (C, B, Q) for 3-D
@@ -266,22 +378,51 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
     """
     times, weights = _bank_shapes(times, weights)
     k = clip_k(cfg)
-    engine = resolve_backend(backend)
+    # measure density only where the policy can use it: explicit backends
+    # ignore it, and when resolve_backend will pick pallas before looking
+    # (TPU with the kernel importable) skip the reduction + host sync
+    density = None
+    if backend == "auto" and not (jax.default_backend() == "tpu"
+                                  and pallas_available()):
+        density = compaction.measured_density(times, cfg.t_steps)
+    engine = resolve_backend(backend, density=density)
 
-    if engine == "pallas":
+    if engine in ("pallas", "pallas_compact"):
         # an explicit pallas request must not silently degrade — only
         # "auto" falls back (resolve_backend already guards availability)
         from repro.kernels import rnl_neuron
+        if times.ndim not in (2, 3):
+            raise ValueError(f"{engine} backend supports (B, n) or "
+                             f"(C, B, n) volleys, got {times.shape}")
+        if engine == "pallas_compact":
+            comp, w_c = _compact_bank(times, weights, cfg.t_steps,
+                                      n_active_max, engine)
+            # fold the column axis into the batch: compaction already made
+            # weights per-volley, so one launch serves all columns
+            ct = comp.times.reshape(-1, comp.width)
+            cw = w_c.reshape(-1, w_c.shape[-2], w_c.shape[-1])
+            fire = rnl_neuron.rnl_fire_times_compact(
+                ct, cw, t_steps=cfg.t_steps, threshold=cfg.threshold, k=k)
+            return fire.reshape(times.shape[:-1] + (weights.shape[-2],))
         if times.ndim == 2:
             return rnl_neuron.rnl_fire_times(
                 times, weights, t_steps=cfg.t_steps,
                 threshold=cfg.threshold, k=k)
-        if times.ndim == 3:
-            return rnl_neuron.rnl_fire_times_layer(
-                times, weights, t_steps=cfg.t_steps,
-                threshold=cfg.threshold, k=k)
-        raise ValueError(f"pallas backend supports (B, n) or (C, B, n) "
-                         f"volleys, got {times.shape}")
+        return rnl_neuron.rnl_fire_times_layer(
+            times, weights, t_steps=cfg.t_steps,
+            threshold=cfg.threshold, k=k)
+
+    if engine == "event":
+        if n_active_max is not None or not isinstance(times, jax.core.Tracer):
+            comp, w_c = _compact_bank(times, weights, cfg.t_steps,
+                                      n_active_max, engine)
+            return fire_times_event(comp.times[..., :, None, :], w_c,
+                                    cfg.threshold, cfg.t_steps, k)
+        # under jit with no static width: uncompacted breakpoint solve —
+        # sorts 2n events but stays independent of t_steps
+        return fire_times_event(
+            times[..., :, None, :], weights[..., None, :, :],
+            cfg.threshold, cfg.t_steps, k)
 
     # all-pairs broadcast: (..., B, 1, n) x (..., 1, Q, n) -> (..., B, Q, n)
     times_bq = jnp.broadcast_to(
@@ -298,3 +439,25 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
         return fire_time_catwalk_closed_form(times_bq, w_bq, cfg.threshold,
                                              cfg.t_steps, k)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def _compact_bank(times: jax.Array, weights: jax.Array, t_steps: int,
+                  n_active_max: Optional[int], engine: str):
+    """Shared compaction pre-pass for the sparse engines: relocate active
+    lines to a dense prefix and gather weights to match. Returns
+    ``(CompactVolleys, weights (..., B, Q, s))``."""
+    if n_active_max is None and isinstance(times, jax.core.Tracer):
+        raise ValueError(
+            f"backend={engine!r} under jit needs a static n_active_max "
+            "(measure max_active + bucket_width outside the traced region)")
+    comp = compaction.compact_volleys(times, t_steps, n_active_max)
+    # a forced width that drops active lines would silently corrupt fire
+    # times; fail loudly where we can see the data (traced callers must
+    # guarantee their static width covers the batch — see bucket_width)
+    if not isinstance(comp.overflow, jax.core.Tracer):
+        dropped = int(jnp.max(comp.overflow)) if comp.overflow.size else 0
+        if dropped > 0:
+            raise ValueError(
+                f"n_active_max={n_active_max} drops up to {dropped} active "
+                f"lines per volley; raise it to >= max_active(times)")
+    return comp, compaction.gather_weights(weights, comp.line_index)

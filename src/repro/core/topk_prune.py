@@ -130,7 +130,7 @@ def topk_network(kind: str, n: int, k: int) -> TopKNetwork:
     selection network (paper's future-work direction; identical to pruned
     best-known sorters at n <= 16). 'auto' = 'optimal' where exact
     best-known lists exist (n <= 16), else 'selection' — this is what the
-    silicon model uses for Catwalk (see DESIGN.md §3.5).
+    silicon model uses for Catwalk (see DESIGN.md §3.6).
     """
     if kind == "auto":
         kind = "optimal" if (sn.optimal_is_exact(n) or k >= n) else "selection"

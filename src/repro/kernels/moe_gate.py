@@ -1,6 +1,6 @@
 """Pallas TPU kernel: fused MoE router (softmax gate + top-k selection).
 
-This is the Catwalk idea at tensor granularity (DESIGN.md §3.3): the
+This is the Catwalk idea at tensor granularity (DESIGN.md §3.4): the
 router *relocates* each token's sparse expert activations into a dense
 top-k cluster so downstream dispatch pays O(k), not O(E). Fusing
 softmax + iterative top-k extraction in one VMEM pass avoids writing the

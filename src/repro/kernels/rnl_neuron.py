@@ -6,7 +6,12 @@ detection — over a (batch x neurons) tile, sweeping gamma-cycle ticks in a
 ``fori_loop`` so the bit-plane (B, Q, n) working set stays in VMEM and HBM
 traffic is one read of spike times/weights + one write of fire times.
 
-Two entry points (DESIGN.md §3.2):
+Every entry point bounds its tick sweep by the batch's *last breakpoint
+tick* ``min(t_steps, max(times + w))`` — an SMEM scalar operand computed in
+XLA outside the launch — so short-ramp / sparse workloads stop as soon as
+no line can still raise a bit, on every grid tile.
+
+Three entry points (DESIGN.md §3.2, §3.3):
 
   * :func:`rnl_fire_times` — one neuron bank, grid (batch tiles, neuron
     tiles). This is the ``backend="pallas"`` engine behind
@@ -14,15 +19,27 @@ Two entry points (DESIGN.md §3.2):
   * :func:`rnl_fire_times_layer` — C independent columns in one launch,
     grid (columns, batch tiles, neuron tiles); serves
     :class:`repro.core.layer.TNNLayer` without a host-side column loop.
+  * :func:`rnl_fire_times_compact` — the spike-compacted fast path
+    (``backend="pallas_compact"``): volleys arrive with their active lines
+    relocated to a dense prefix of width ``s`` (core/compaction.py — the
+    software analogue of the paper's unary top-k relocation) and weights
+    pre-gathered per volley, so the sweep's inner width is the active-line
+    budget ``s`` instead of ``n``.
 
-Both optionally emit a second output: per-(volley, neuron) *clip-event*
-counts (ticks where the raw popcount exceeded k — the paper's sparsity-
-violation diagnostic), fused into the same tick sweep at no extra HBM read.
+The bank/layer kernels optionally emit a second output: per-(volley,
+neuron) *clip-event* counts (ticks where the raw popcount exceeded k — the
+paper's sparsity-violation diagnostic), fused into the same tick sweep at
+no extra HBM read. Early exit cannot change clip counts: past the last
+breakpoint every popcount is zero.
 
 Block shapes (bank):
+  t_hi    (1,)             int32 SMEM (shared by all tiles)
   times   (B_TILE, n)      int32
   weights (Q_TILE, n)      int32
   fire    (B_TILE, Q_TILE) int32 out   [+ clip (B_TILE, Q_TILE) int32 out]
+
+Block shapes (compact): times (B_TILE, s); weights (B_TILE, Q_TILE, s) —
+per-volley after the compaction gather.
 """
 
 from __future__ import annotations
@@ -32,6 +49,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import common
 from repro.core.coding import NO_SPIKE
@@ -43,13 +61,21 @@ B_TILE = 8
 Q_TILE = 8
 
 
-def _tick_sweep(times, w, *, t_steps, threshold, k):
-    """Shared tick loop: (B, n) times x (Q, n) weights -> fire/clip (B, Q)."""
+def _tick_sweep(times, w, *, t_hi, threshold, k):
+    """Shared tick loop: (B, n) times x (Q, n) weights -> fire/clip (B, Q).
+
+    ``t_hi`` is a traced scalar loop bound (ticks >= t_hi carry no ramp
+    bits, so stopping there is exact); ``w`` may also be (B, Q, n) for the
+    compacted path's per-volley weights.
+    """
 
     def tick(t, carry):
         pot, fired, clip = carry
         rel = t - times[:, None, :]                   # (B, 1, n)
-        active = (rel >= 0) & (rel < w[None, :, :])   # (B, Q, n)
+        if w.ndim == 2:
+            active = (rel >= 0) & (rel < w[None, :, :])    # (B, Q, n)
+        else:
+            active = (rel >= 0) & (rel < w)                # per-volley w
         raw = jnp.sum(active.astype(jnp.int32), axis=-1)   # (B, Q)
         if k is not None:
             inc = jnp.minimum(raw, k)                 # Catwalk clip
@@ -61,41 +87,69 @@ def _tick_sweep(times, w, *, t_steps, threshold, k):
         fired = jnp.where(newly, t, fired)
         return pot, fired, clip
 
-    b, q = times.shape[0], w.shape[0]
+    b = times.shape[0]
+    q = w.shape[0] if w.ndim == 2 else w.shape[1]
     pot0 = jnp.zeros((b, q), jnp.int32)
     fire0 = jnp.full((b, q), NO_SPIKE_INT, jnp.int32)
     clip0 = jnp.zeros((b, q), jnp.int32)
-    _, fired, clip = jax.lax.fori_loop(0, t_steps, tick, (pot0, fire0, clip0))
+    _, fired, clip = jax.lax.fori_loop(0, t_hi, tick, (pot0, fire0, clip0))
     return fired, clip
 
 
-def _rnl_kernel(times_ref, weights_ref, out_ref, *, t_steps, threshold, k):
+def _sweep_bound(contrib, t_steps: int, threshold: int) -> jax.Array:
+    """(1,) int32 SMEM operand: first tick past the last possible ramp bit,
+    clamped to [0, t_steps]. ``contrib`` holds per-line ``times + w`` where
+    the line is active (``times < t_steps``) and 0 elsewhere.
+
+    threshold <= 0 is met by the zero initial potential, so the soma fires
+    at tick 0 even with no input — at least one tick must run for the
+    bounded sweep to stay bit-exact with the full scan.
+    """
+    t_hi = jnp.minimum(jnp.int32(t_steps), jnp.max(contrib))
+    floor = min(1, t_steps) if threshold <= 0 else 0
+    return jnp.maximum(t_hi, floor).astype(jnp.int32).reshape(1)
+
+
+def _smem_scalar_spec():
+    """Whole-array SMEM spec for the shared t_hi scalar (any grid)."""
+    return pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
+def _rnl_kernel(thi_ref, times_ref, weights_ref, out_ref, *,
+                threshold, k):
     fired, _ = _tick_sweep(times_ref[...], weights_ref[...],
-                           t_steps=t_steps, threshold=threshold, k=k)
+                           t_hi=thi_ref[0], threshold=threshold, k=k)
     out_ref[...] = fired
 
 
-def _rnl_clip_kernel(times_ref, weights_ref, out_ref, clip_ref, *,
-                     t_steps, threshold, k):
+def _rnl_clip_kernel(thi_ref, times_ref, weights_ref, out_ref, clip_ref, *,
+                     threshold, k):
     fired, clip = _tick_sweep(times_ref[...], weights_ref[...],
-                              t_steps=t_steps, threshold=threshold, k=k)
+                              t_hi=thi_ref[0], threshold=threshold, k=k)
     out_ref[...] = fired
     clip_ref[...] = clip
 
 
-def _rnl_layer_kernel(times_ref, weights_ref, out_ref, *,
-                      t_steps, threshold, k):
+def _rnl_layer_kernel(thi_ref, times_ref, weights_ref, out_ref, *,
+                      threshold, k):
     fired, _ = _tick_sweep(times_ref[0], weights_ref[0],
-                           t_steps=t_steps, threshold=threshold, k=k)
+                           t_hi=thi_ref[0], threshold=threshold, k=k)
     out_ref[0] = fired
 
 
-def _rnl_layer_clip_kernel(times_ref, weights_ref, out_ref, clip_ref, *,
-                           t_steps, threshold, k):
+def _rnl_layer_clip_kernel(thi_ref, times_ref, weights_ref, out_ref,
+                           clip_ref, *, threshold, k):
     fired, clip = _tick_sweep(times_ref[0], weights_ref[0],
-                              t_steps=t_steps, threshold=threshold, k=k)
+                              t_hi=thi_ref[0], threshold=threshold, k=k)
     out_ref[0] = fired
     clip_ref[0] = clip
+
+
+def _rnl_compact_kernel(thi_ref, times_ref, weights_ref, out_ref, *,
+                        threshold, k):
+    fired, _ = _tick_sweep(times_ref[...], weights_ref[...],
+                           t_hi=thi_ref[0], threshold=threshold, k=k)
+    out_ref[...] = fired
 
 
 @functools.partial(jax.jit,
@@ -127,30 +181,35 @@ def rnl_fire_times(times: jax.Array, weights: jax.Array, *, t_steps: int,
     times_p = jnp.pad(times, ((0, b_pad - bsz), (0, 0)),
                       constant_values=int(NO_SPIKE))
     weights_p = jnp.pad(weights, ((0, q_pad - qsz), (0, 0)))
+    # early-exit bound: per-line worst-case last breakpoint (max over
+    # neurons of times + w), reduced to one scalar for the whole launch
+    w_line = jnp.max(weights_p, axis=0)                        # (n,)
+    t_hi = _sweep_bound(
+        jnp.where(times_p < t_steps, times_p + w_line[None, :], 0), t_steps,
+        threshold)
 
     grid = (b_pad // B_TILE, q_pad // Q_TILE)
     in_specs = [
+        _smem_scalar_spec(),
         pl.BlockSpec((B_TILE, n), lambda b, q: (b, 0)),
         pl.BlockSpec((Q_TILE, n), lambda b, q: (q, 0)),
     ]
     out_spec = pl.BlockSpec((B_TILE, Q_TILE), lambda b, q: (b, q))
     if not with_clip:
         out = pl.pallas_call(
-            functools.partial(_rnl_kernel, t_steps=t_steps,
-                              threshold=threshold, k=k),
+            functools.partial(_rnl_kernel, threshold=threshold, k=k),
             out_shape=jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32),
             grid=grid, in_specs=in_specs, out_specs=out_spec,
             interpret=common.use_interpret(),
-        )(times_p, weights_p)
+        )(t_hi, times_p, weights_p)
         return out[:bsz, :qsz]
     fire, clip = pl.pallas_call(
-        functools.partial(_rnl_clip_kernel, t_steps=t_steps,
-                          threshold=threshold, k=k),
+        functools.partial(_rnl_clip_kernel, threshold=threshold, k=k),
         out_shape=[jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32),
                    jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32)],
         grid=grid, in_specs=in_specs, out_specs=[out_spec, out_spec],
         interpret=common.use_interpret(),
-    )(times_p, weights_p)
+    )(t_hi, times_p, weights_p)
     return fire[:bsz, :qsz], clip[:bsz, :qsz]
 
 
@@ -182,9 +241,14 @@ def rnl_fire_times_layer(times: jax.Array, weights: jax.Array, *,
     times_p = jnp.pad(times, ((0, 0), (0, b_pad - bsz), (0, 0)),
                       constant_values=int(NO_SPIKE))
     weights_p = jnp.pad(weights, ((0, 0), (0, q_pad - qsz), (0, 0)))
+    w_line = jnp.max(weights_p, axis=1)                        # (C, n)
+    t_hi = _sweep_bound(
+        jnp.where(times_p < t_steps, times_p + w_line[:, None, :], 0),
+        t_steps, threshold)
 
     grid = (csz, b_pad // B_TILE, q_pad // Q_TILE)
     in_specs = [
+        _smem_scalar_spec(),
         pl.BlockSpec((1, B_TILE, n), lambda c, b, q: (c, b, 0)),
         pl.BlockSpec((1, Q_TILE, n), lambda c, b, q: (c, q, 0)),
     ]
@@ -192,18 +256,70 @@ def rnl_fire_times_layer(times: jax.Array, weights: jax.Array, *,
     out_shape = jax.ShapeDtypeStruct((csz, b_pad, q_pad), jnp.int32)
     if not with_clip:
         out = pl.pallas_call(
-            functools.partial(_rnl_layer_kernel, t_steps=t_steps,
-                              threshold=threshold, k=k),
+            functools.partial(_rnl_layer_kernel, threshold=threshold, k=k),
             out_shape=out_shape,
             grid=grid, in_specs=in_specs, out_specs=out_spec,
             interpret=common.use_interpret(),
-        )(times_p, weights_p)
+        )(t_hi, times_p, weights_p)
         return out[:, :bsz, :qsz]
     fire, clip = pl.pallas_call(
-        functools.partial(_rnl_layer_clip_kernel, t_steps=t_steps,
-                          threshold=threshold, k=k),
+        functools.partial(_rnl_layer_clip_kernel, threshold=threshold, k=k),
         out_shape=[out_shape, out_shape],
         grid=grid, in_specs=in_specs, out_specs=[out_spec, out_spec],
         interpret=common.use_interpret(),
-    )(times_p, weights_p)
+    )(t_hi, times_p, weights_p)
     return fire[:, :bsz, :qsz], clip[:, :bsz, :qsz]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_steps", "threshold", "k"))
+def rnl_fire_times_compact(times: jax.Array, weights: jax.Array, *,
+                           t_steps: int, threshold: int,
+                           k: int | None = None):
+    """Fire times over spike-compacted volleys (DESIGN.md §3.3).
+
+    The sparse fast path: volleys have been relocated so each row's active
+    lines occupy a dense prefix of width ``s`` (``NO_SPIKE`` padding past
+    the prefix), and weights were gathered through the same line-index map
+    — per volley, so the weight operand is 3-D. The tick sweep then runs
+    over the compacted width ``s`` (instead of ``n``) and stops at the
+    batch's last breakpoint tick. Bit-exact vs :func:`rnl_fire_times` on
+    the uncompacted inputs because dropped lines carry no ramp bits.
+
+    Args:
+      times:   (B, s) int32 compacted spike times
+        (:func:`repro.core.compaction.compact_volleys`).
+      weights: (B, Q, s) int32 per-volley gathered weights
+        (:func:`repro.core.compaction.gather_weights`).
+      t_steps, threshold, k: as in :func:`rnl_fire_times`.
+
+    Returns:
+      (B, Q) int32 fire times.
+    """
+    bsz, s = times.shape
+    b2, qsz, s2 = weights.shape
+    assert bsz == b2 and s == s2, (times.shape, weights.shape)
+    b_pad = common.round_up(bsz, B_TILE)
+    q_pad = common.round_up(qsz, Q_TILE)
+    times_p = jnp.pad(times, ((0, b_pad - bsz), (0, 0)),
+                      constant_values=int(NO_SPIKE))
+    weights_p = jnp.pad(weights, ((0, b_pad - bsz), (0, q_pad - qsz),
+                                  (0, 0)))
+    t_hi = _sweep_bound(
+        jnp.where(times_p[:, None, :] < t_steps,
+                  times_p[:, None, :] + weights_p, 0), t_steps, threshold)
+
+    grid = (b_pad // B_TILE, q_pad // Q_TILE)
+    in_specs = [
+        _smem_scalar_spec(),
+        pl.BlockSpec((B_TILE, s), lambda b, q: (b, 0)),
+        pl.BlockSpec((B_TILE, Q_TILE, s), lambda b, q: (b, q, 0)),
+    ]
+    out_spec = pl.BlockSpec((B_TILE, Q_TILE), lambda b, q: (b, q))
+    out = pl.pallas_call(
+        functools.partial(_rnl_compact_kernel, threshold=threshold, k=k),
+        out_shape=jax.ShapeDtypeStruct((b_pad, q_pad), jnp.int32),
+        grid=grid, in_specs=in_specs, out_specs=out_spec,
+        interpret=common.use_interpret(),
+    )(t_hi, times_p, weights_p)
+    return out[:bsz, :qsz]

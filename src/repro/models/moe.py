@@ -1,6 +1,6 @@
 """Mixture-of-experts layer with Catwalk-style top-k relocation dispatch.
 
-The paper's mechanism at tensor granularity (DESIGN.md §3.3): per token
+The paper's mechanism at tensor granularity (DESIGN.md §3.4): per token
 the router activates k of E experts (k << E, e.g. 2/128 for arctic) — the
 same extreme sparsity as spike volleys. Dispatch modes:
 

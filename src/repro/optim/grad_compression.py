@@ -1,7 +1,7 @@
 """Catwalk-style top-k gradient compression with error feedback.
 
 The paper's insight — relocate the few active elements, pay only for k —
-applied to the cross-pod gradient all-reduce (DESIGN.md §3.3b): per tensor,
+applied to the cross-pod gradient all-reduce (DESIGN.md §3.4b): per tensor,
 keep the top-k-magnitude fraction of (gradient + error buffer) entries,
 zero the rest, and carry the residual forward in the error buffer
 (Stich et al.-style EF-SGD). The sparse tensor all-reduces at ~rho of the

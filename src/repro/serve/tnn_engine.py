@@ -8,10 +8,24 @@ volley per gamma cycle. Requests are admitted into a fixed pool of B slots
 next volleys into the ``(B, n_inputs)`` batch that ``TNNLayer``/``TNNNetwork``
 already vectorize over, runs one jit-compiled ``network_forward`` — every
 neuron evaluated through the backend-dispatched ``fire_times_bank`` (scan /
-closed_form / pallas / auto) — and scatters the ``(B, C, Q)`` output spike
-times back to the slots. A request retires the moment its stream is exhausted;
-its slot re-fills from the pending queue at the top of the next step. No
-barrier on the slowest request.
+closed_form / event / pallas / auto) — and scatters the ``(B, C, Q)`` output
+spike times back to the slots. A request retires the moment its stream is
+exhausted; its slot re-fills from the pending queue at the top of the next
+step. No barrier on the slowest request.
+
+With ``backend="auto"`` the engine measures each batch's spike density
+host-side (before the jit boundary) and re-resolves the neuron-bank engine
+per step (DESIGN.md §3.3): sparse batches — GRF-encoded features, bursty
+clients, NO_SPIKE-padded free slots — take the event engine's O(s log s)
+breakpoint solve; dense batches keep the vectorized closed form. When a
+sparse engine is picked the engine also measures the batch's max active
+lines per receptive field, buckets it (``compaction.bucket_width``), and
+compiles the stack with static per-layer compaction widths
+(``network.sparse_widths``: measured bucket for layer 0, the 1-WTA
+structural bound for deeper layers) — so the jitted solve sorts ``2s``
+breakpoints, not ``2n``, and recompiles are bounded to O(log n) buckets.
+All engines are bit-exact, so the policy is invisible in the outputs;
+``stats()`` reports the mean measured density and per-engine step counts.
 
 Empty slots carry all-``NO_SPIKE`` volleys: silent lines never fire a neuron,
 so padding rows are inert, and the batch shape stays static — one XLA
@@ -39,8 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coding, network, neuron
+from repro.core import coding, compaction, network, neuron
 from repro.serve import slots
+
+#: neuron-bank engines that consume a static compaction width under jit
+SPARSE_ENGINES = ("event", "pallas_compact")
 
 NO_SPIKE = int(coding.NO_SPIKE)
 
@@ -50,8 +67,13 @@ class TNNServeConfig:
     """Engine knobs: slot count (= batch rows) and neuron-bank backend."""
 
     n_slots: int = 8
-    #: fire_times_bank engine for every layer: scan | closed_form | pallas |
-    #: auto (pallas on TPU, closed form elsewhere).
+    #: fire_times_bank engine for every layer: scan | closed_form | event |
+    #: pallas | auto. ``auto`` re-resolves every step from the *measured*
+    #: batch density (host-side, before the jit boundary): pallas on TPU,
+    #: else the event engine when the fraction of contributing lines is at
+    #: most ``neuron.DENSITY_EVENT_MAX`` — NO_SPIKE-padded slot batches are
+    #: exactly the sparse case it wins on — else the closed form. All
+    #: engines are bit-exact, so the policy never changes outputs.
     backend: neuron.Backend = "auto"
 
 
@@ -63,6 +85,11 @@ class TNNRequest:
     volleys: np.ndarray  # (n_cycles, n_inputs) int32 spike times
     outputs: List[np.ndarray] = dataclasses.field(default_factory=list)
     cursor: int = 0
+    #: fraction of this request's lines carrying an in-cycle spike
+    #: (measured at submit; the sparsity the auto policy exploits)
+    density: float = 0.0
+    #: engines the auto policy actually served this request's cycles with
+    backends: set = dataclasses.field(default_factory=set)
 
     @property
     def n_cycles(self) -> int:
@@ -105,12 +132,22 @@ class TNNEngine:
         self.params = tuple(jnp.asarray(p) for p in params)
         self.pool: slots.SlotPool[TNNRequest] = slots.SlotPool(scfg.n_slots)
         self._fwd = jax.jit(lambda p, v: network.network_forward(p, v, net)[0])
+        # density-less resolution = the engine self._fwd compiles to; the
+        # per-step density policy swaps in a sparse engine via _fwd_for
+        self._default_engine = neuron.resolve_backend(scfg.backend)
+        self._fwd_alt: Dict[tuple, object] = {}
+        self._t_steps = net.layers[0].t_steps
+        # layer-0 receptive-field line ids, host-side: the per-step sparse
+        # width is measured on the gathered view the neuron banks will see
+        self._rf0 = np.asarray(net.layers[0].rf_index())
         self._next_id = 0
         # timestamp-only entries (item=None) — see step()
         self._retired: List[slots.SlotEntry] = []
         self.n_steps = 0
         self.n_volleys = 0
         self._run_s = 0.0
+        self._density_sum = 0.0
+        self._backend_steps: Dict[str, int] = {}
 
     def reset_stats(self) -> None:
         """Zero the throughput/latency accounting (e.g. after jit warmup);
@@ -119,6 +156,8 @@ class TNNEngine:
         self.n_steps = 0
         self.n_volleys = 0
         self._run_s = 0.0
+        self._density_sum = 0.0
+        self._backend_steps = {}
         self.pool.n_retired = 0
         self.pool.n_submitted = self.pool.n_live + self.pool.n_pending
 
@@ -134,10 +173,54 @@ class TNNEngine:
             )
         if volleys.shape[0] == 0:
             raise ValueError("empty volley stream")
-        req = TNNRequest(req_id=self._next_id, volleys=volleys)
+        density = float(np.mean(volleys < self._t_steps))
+        req = TNNRequest(req_id=self._next_id, volleys=volleys, density=density)
         self._next_id += 1
         self.pool.submit(req)
         return req
+
+    def _layer0_width(self, batch: np.ndarray) -> int:
+        """Bucketed max active-line count over the batch's layer-0
+        receptive fields — the static compaction width a sparse-engine
+        compile needs (exact measurement, so no active line can drop)."""
+        active = batch[:, self._rf0] < self._t_steps  # (B, C, rf)
+        s = int(active.sum(axis=-1).max()) if active.size else 0
+        return compaction.bucket_width(s)
+
+    def _fwd_for(self, engine: str, first_width: Optional[int] = None):
+        """jit ``network_forward`` for a density-resolved engine.
+
+        The default resolution uses the compiled ``self._fwd``; any other
+        resolution lazily compiles a variant with the network's
+        ``backend="auto"`` layers pinned to ``engine`` (explicit per-layer
+        backends are respected). Sparse engines additionally pin static
+        compaction widths (``network.sparse_widths`` seeded with the
+        measured+bucketed ``first_width``), so the jitted stack runs the
+        compacted solve; distinct buckets get distinct compiles, bounded
+        to O(log n) entries by the power-of-two bucketing.
+        """
+        if engine == self._default_engine and first_width is None:
+            return self._fwd
+        key = (engine, first_width)
+        if key not in self._fwd_alt:
+            widths = (
+                network.sparse_widths(self.net, first_width)
+                if first_width is not None
+                else (None,) * len(self.net.layers)
+            )
+            layers = []
+            for lc, width in zip(self.net.layers, widths):
+                eff = engine if lc.backend == "auto" else lc.backend
+                layers.append(
+                    dataclasses.replace(
+                        lc,
+                        backend=eff,
+                        n_active_max=width if eff in SPARSE_ENGINES else lc.n_active_max,
+                    )
+                )
+            pinned = network.make_network(layers)
+            self._fwd_alt[key] = jax.jit(lambda p, v: network.network_forward(p, v, pinned)[0])
+        return self._fwd_alt[key]
 
     def step(self) -> List[TNNRequest]:
         """One gamma cycle for every live slot; returns requests retired
@@ -151,10 +234,21 @@ class TNNEngine:
         for idx, entry in live:
             req = entry.item
             batch[idx] = req.volleys[req.cursor]
-        out = np.asarray(self._fwd(self.params, jnp.asarray(batch)))
+        # measured batch density (host-side — the jit boundary can't see
+        # it): NO_SPIKE-padded free slots count as silent lines, which is
+        # precisely why partially-filled batches resolve to the event path
+        density = float(np.mean(batch < self._t_steps))
+        engine = neuron.resolve_backend(self.scfg.backend, density=density)
+        self._density_sum += density
+        self._backend_steps[engine] = self._backend_steps.get(engine, 0) + 1
+        # sparse engines compile against a static compaction width measured
+        # from this batch's own receptive-field view (exact, never drops)
+        width = self._layer0_width(batch) if engine in SPARSE_ENGINES else None
+        out = np.asarray(self._fwd_for(engine, width)(self.params, jnp.asarray(batch)))
         retired: List[TNNRequest] = []
         for idx, entry in live:
             req = entry.item
+            req.backends.add(engine)
             # copy: out[idx] is a view that would pin the whole (B, C, Q)
             # batch array for the life of the request
             req.outputs.append(out[idx].copy())
@@ -197,6 +291,9 @@ class TNNEngine:
         if self.n_steps > 0:
             denom = self.n_steps * self.scfg.n_slots
             out["slot_occupancy"] = self.n_volleys / denom
+            out["density_mean"] = self._density_sum / self.n_steps
+        for engine, steps in self._backend_steps.items():
+            out[f"steps_{engine}"] = float(steps)
         out.update(slots.latency_summary(self._retired))
         return out
 

@@ -1,0 +1,63 @@
+"""benchmarks/trend.py: the CI bench-trend delta summary (warn-only gate)."""
+
+import json
+
+from benchmarks import trend
+
+
+def _write(dirpath, bench, rows, smoke=False):
+    payload = {"bench": bench, "smoke": smoke,
+               "results": [{"name": n, "us_per_call": us, "derived": ""}
+                           for n, us in rows]}
+    path = dirpath / f"BENCH_{bench}.json"
+    path.write_text(json.dumps(payload))
+    return path
+
+
+def test_trend_reports_regression_and_improvement(tmp_path, capsys):
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0), ("b", 50.0)])
+    _write(cur, "kernels", [("a", 150.0), ("b", 30.0)])
+    assert trend.main([str(prev), str(cur)]) == 0      # warn-only
+    out = capsys.readouterr().out
+    assert "regression" in out and "improvement" in out
+    assert "+50%" in out and "-40%" in out
+
+
+def test_trend_strict_fails_on_regression(tmp_path, capsys):
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0)])
+    _write(cur, "kernels", [("a", 200.0)])
+    assert trend.main([str(prev), str(cur), "--strict"]) == 1
+
+
+def test_trend_smoke_rows_never_gate(tmp_path, capsys):
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0)], smoke=True)
+    _write(cur, "kernels", [("a", 500.0)], smoke=True)
+    assert trend.main([str(prev), str(cur), "--strict"]) == 0
+    assert "(smoke)" in capsys.readouterr().out
+
+
+def test_trend_missing_previous_is_noop(tmp_path, capsys):
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(cur, "kernels", [("a", 1.0)])
+    assert trend.main([str(prev), str(cur)]) == 0
+    assert "nothing to compare" in capsys.readouterr().out
+
+
+def test_trend_ignores_non_numeric_and_unmatched_rows(tmp_path, capsys):
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0), ("gone", 5.0),
+                             ("weird", "n/a")])
+    _write(cur, "kernels", [("a", 100.0), ("new", 7.0)])
+    assert trend.main([str(prev), str(cur)]) == 0
+    out = capsys.readouterr().out
+    assert "| a |" in out          # matched numeric row is compared
+    assert "| gone |" not in out   # unmatched rows don't produce entries
+    assert "| weird |" not in out  # non-numeric timings are skipped

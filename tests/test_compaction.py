@@ -1,0 +1,221 @@
+"""Spike compaction + compacted/early-exit Pallas paths.
+
+Covers the relocation pre-pass invariants (core/compaction.py), the
+spike-compacted kernel (``backend="pallas_compact"``), and the tick-sweep
+early exit that now bounds every Pallas launch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding, compaction, neuron
+
+NO_SPIKE = int(coding.NO_SPIKE)
+
+
+def _sparse(seed, shape, t_max, p_silent=0.7):
+    kt, ks = jax.random.split(jax.random.PRNGKey(seed))
+    t = jax.random.randint(kt, shape, 0, t_max)
+    silent = jax.random.bernoulli(ks, p_silent, shape)
+    return jnp.where(silent, coding.NO_SPIKE, t)
+
+
+# ------------------------------------------------------------- compaction
+def test_compact_preserves_active_lines_in_order():
+    times = jnp.array([[NO_SPIKE, 3, NO_SPIKE, 7, 1, NO_SPIKE]], jnp.int32)
+    comp = compaction.compact_volleys(times, t_steps=16)
+    assert comp.width == 3
+    np.testing.assert_array_equal(np.asarray(comp.times), [[3, 7, 1]])
+    np.testing.assert_array_equal(np.asarray(comp.line_index[0]), [1, 3, 4])
+    assert int(comp.n_active[0]) == 3 and int(comp.overflow[0]) == 0
+
+
+def test_compact_drops_out_of_cycle_spikes():
+    """times >= t_steps are inert within the cycle and must not occupy
+    prefix slots."""
+    times = jnp.array([[20, 3, 16, NO_SPIKE]], jnp.int32)
+    comp = compaction.compact_volleys(times, t_steps=16)
+    assert comp.width == 1
+    np.testing.assert_array_equal(np.asarray(comp.times), [[3]])
+
+
+def test_compact_pads_with_no_spike():
+    times = jnp.array([[1, NO_SPIKE], [NO_SPIKE, NO_SPIKE]], jnp.int32)
+    comp = compaction.compact_volleys(times, t_steps=8, n_active_max=2)
+    got = np.asarray(comp.times)
+    np.testing.assert_array_equal(got[0], [1, NO_SPIKE])
+    assert (got[1] == NO_SPIKE).all()
+
+
+def test_compact_forced_width_reports_overflow():
+    times = jnp.array([[0, 1, 2, 3]], jnp.int32)
+    comp = compaction.compact_volleys(times, t_steps=8, n_active_max=2)
+    assert int(comp.overflow[0]) == 2
+    assert comp.width == 2
+
+
+def test_compact_leading_batch_axes():
+    times = _sparse(0, (3, 5, 12), 20)
+    comp = compaction.compact_volleys(times, t_steps=24)
+    assert comp.times.shape == (3, 5, comp.width)
+    assert (np.asarray(comp.overflow) == 0).all()
+
+
+def test_compact_under_jit_requires_static_width():
+    times = _sparse(1, (2, 8), 12)
+    with pytest.raises(ValueError, match="n_active_max"):
+        jax.jit(lambda t: compaction.compact_volleys(t, 16).times)(times)
+    # with the width pinned it traces fine
+    out = jax.jit(
+        lambda t: compaction.compact_volleys(t, 16, n_active_max=4).times
+    )(times)
+    assert out.shape == (2, 4)
+
+
+def test_gather_weights_matches_loop():
+    times = _sparse(2, (4, 10), 16)
+    comp = compaction.compact_volleys(times, t_steps=16)
+    w = jax.random.randint(jax.random.PRNGKey(3), (5, 10), 0, 8)
+    got = np.asarray(compaction.gather_weights(w, comp.line_index))
+    idx = np.asarray(comp.line_index)
+    for b in range(4):
+        for q in range(5):
+            np.testing.assert_array_equal(got[b, q],
+                                          np.asarray(w)[q, idx[b]])
+
+
+def test_bucket_width_powers():
+    assert compaction.bucket_width(0) == 8
+    assert compaction.bucket_width(1) == 8
+    assert compaction.bucket_width(8) == 8
+    assert compaction.bucket_width(9) == 16
+    assert compaction.bucket_width(100) == 128
+
+
+def test_measured_density():
+    times = jnp.array([[0, 5, NO_SPIKE, NO_SPIKE]], jnp.int32)
+    assert compaction.measured_density(times) == pytest.approx(0.5)
+    # in-cycle definition: the spike at t=5 is inert for t_steps=4
+    assert compaction.measured_density(times, t_steps=4) == \
+        pytest.approx(0.25)
+    got = {}
+
+    def traced(t):
+        got["d"] = compaction.measured_density(t, 4)
+        return t
+
+    jax.jit(traced)(times)
+    assert got["d"] is None
+
+
+# ----------------------------------------------------- compacted pallas path
+@pytest.mark.parametrize("dendrite", ["pc_compact", "catwalk"])
+@pytest.mark.parametrize("p_silent", [0.3, 0.8, 1.0])
+def test_pallas_compact_matches_scan(dendrite, p_silent):
+    cfg = neuron.NeuronConfig(n_inputs=16, threshold=7, t_steps=24,
+                              dendrite=dendrite, k=2)
+    times = _sparse(4, (9, 16), 28, p_silent)
+    w = jax.random.randint(jax.random.PRNGKey(5), (6, 16), 0, 8)
+    want = np.asarray(neuron.fire_times_bank(times, w, cfg, backend="scan"))
+    got = np.asarray(neuron.fire_times_bank(times, w, cfg,
+                                            backend="pallas_compact"))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_pallas_compact_column_stack_one_launch():
+    """(C, B, n): compaction folds columns into the batch for one launch."""
+    cfg = neuron.NeuronConfig(n_inputs=8, threshold=5, t_steps=16,
+                              dendrite="catwalk", k=2)
+    times = _sparse(6, (3, 5, 8), 12, 0.5)
+    w = jax.random.randint(jax.random.PRNGKey(7), (3, 4, 8), 0, 6)
+    want = np.asarray(neuron.fire_times_bank(times, w, cfg, backend="scan"))
+    got = np.asarray(neuron.fire_times_bank(times, w, cfg,
+                                            backend="pallas_compact"))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_pallas_compact_under_jit_requires_width():
+    cfg = neuron.NeuronConfig(n_inputs=8, threshold=5, t_steps=16,
+                              dendrite="catwalk", k=2)
+    times = _sparse(8, (2, 8), 12)
+    w = jax.random.randint(jax.random.PRNGKey(9), (2, 8), 0, 6)
+    with pytest.raises(ValueError, match="n_active_max"):
+        jax.jit(lambda t: neuron.fire_times_bank(
+            t, w, cfg, backend="pallas_compact"))(times)
+    got = jax.jit(lambda t: neuron.fire_times_bank(
+        t, w, cfg, backend="pallas_compact", n_active_max=8))(times)
+    want = neuron.fire_times_bank(times, w, cfg, backend="scan")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ------------------------------------------------------- kernel early exit
+def test_pallas_early_exit_long_tail_correct():
+    """t_steps far past the last breakpoint: the bounded sweep must stop
+    early (interpret mode would crawl otherwise) and stay bit-exact."""
+    from repro.kernels import rnl_neuron
+    times = jnp.array([[0, 2, NO_SPIKE, NO_SPIKE]], jnp.int32)
+    w = jnp.array([[3, 3, 3, 3]], jnp.int32)
+    # last breakpoint is t=5; t_steps=4096 would be ~1000x more ticks
+    got = rnl_neuron.rnl_fire_times(times, w, t_steps=4096, threshold=5,
+                                    k=None)
+    want = neuron.fire_time_closed_form(
+        jnp.broadcast_to(times, (1, 4)), w[0], 5, 4096)
+    np.testing.assert_array_equal(np.asarray(want),
+                                  np.asarray(got)[:, 0])
+
+
+def test_pallas_early_exit_all_silent_zero_iterations():
+    from repro.kernels import rnl_neuron
+    times = jnp.full((3, 8), NO_SPIKE, jnp.int32)
+    w = jnp.full((2, 8), 7, jnp.int32)
+    got = rnl_neuron.rnl_fire_times(times, w, t_steps=2048, threshold=1,
+                                    k=2)
+    assert (np.asarray(got) == NO_SPIKE).all()
+
+
+def test_pallas_early_exit_nonpositive_threshold_fires_tick_zero():
+    """threshold <= 0: the zero initial potential already meets it, so the
+    bounded sweep must still run (at least) tick 0 — even all-silent."""
+    from repro.kernels import rnl_neuron
+    times = jnp.full((2, 4), NO_SPIKE, jnp.int32)
+    w = jnp.full((1, 4), 3, jnp.int32)
+    cfg = neuron.NeuronConfig(n_inputs=4, threshold=0, t_steps=8,
+                              dendrite="pc_compact")
+    want = np.asarray(neuron.fire_times_bank(times, w, cfg, backend="scan"))
+    got = np.asarray(rnl_neuron.rnl_fire_times(times, w, t_steps=8,
+                                               threshold=0, k=None))
+    np.testing.assert_array_equal(want, got)
+    assert (got == 0).all()
+
+
+def test_sparse_engines_reject_width_that_drops_active_lines():
+    """A forced n_active_max below the true active count must fail loudly,
+    not silently corrupt fire times (concrete inputs)."""
+    cfg = neuron.NeuronConfig(n_inputs=6, threshold=12, t_steps=32,
+                              dendrite="pc_compact")
+    times = jnp.arange(6, dtype=jnp.int32)[None, :]     # all 6 lines active
+    w = jnp.full((1, 6), 4, jnp.int32)
+    for backend in ("event", "pallas_compact"):
+        with pytest.raises(ValueError, match="active lines"):
+            neuron.fire_times_bank(times, w, cfg, backend=backend,
+                                   n_active_max=2)
+
+
+def test_pallas_layer_early_exit_with_clip_matches_scan():
+    """The layer kernel's bounded sweep keeps clip counts exact (no active
+    ticks exist past the bound)."""
+    from repro.kernels import rnl_neuron
+    cfg = neuron.NeuronConfig(n_inputs=8, threshold=6, t_steps=64,
+                              dendrite="catwalk", k=2)
+    times = _sparse(10, (2, 5, 8), 10, 0.3)
+    w = jax.random.randint(jax.random.PRNGKey(11), (2, 3, 8), 1, 6)
+    fire, clip = rnl_neuron.rnl_fire_times_layer(
+        times, w, t_steps=64, threshold=6, k=2, with_clip=True)
+    ref = neuron.simulate_neuron(
+        jnp.broadcast_to(times[:, :, None, :], (2, 5, 3, 8)),
+        jnp.broadcast_to(w[:, None, :, :], (2, 5, 3, 8)), cfg)
+    np.testing.assert_array_equal(np.asarray(ref.fire_time),
+                                  np.asarray(fire))
+    np.testing.assert_array_equal(np.asarray(ref.clip_events),
+                                  np.asarray(clip))

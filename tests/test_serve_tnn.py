@@ -92,7 +92,8 @@ def _streams(net, n_req, max_cycles=3, seed=0):
     return out
 
 
-@pytest.mark.parametrize("backend", ["scan", "closed_form", "pallas", "auto"])
+@pytest.mark.parametrize("backend",
+                         ["scan", "closed_form", "event", "pallas", "auto"])
 def test_engine_bit_exact_vs_unbatched(backend):
     """Slot batching must not change a single output spike time."""
     net = _small_net()
@@ -222,6 +223,52 @@ def test_reset_stats_keeps_pending_work():
     st = eng.stats()
     assert st["n_retired"] == 1.0 and st["n_steps"] >= 1.0
     assert st["latency_ms_mean"] > 0.0
+
+
+def test_sparse_engine_compiles_compacted_stack():
+    """A sparse resolution must plumb static compaction widths into the
+    jitted stack: layer 0 gets the measured+bucketed batch width, deeper
+    layers the 1-WTA structural bound — and stay bit-exact."""
+    l1 = layer.TNNLayer(n_columns=2, rf_size=4, n_neurons=3, threshold=5,
+                        t_steps=12, dendrite="catwalk", k=2)
+    l2 = layer.TNNLayer(n_columns=1, rf_size=6, n_neurons=2, threshold=4,
+                        t_steps=12, dendrite="pc_compact")
+    net = network.make_network([l1, l2])
+    params = _params(net)
+    # sparse streams: ~2 active lines out of 8 -> auto resolves to event
+    rng = np.random.default_rng(3)
+    streams = []
+    for _ in range(5):
+        t = np.full((2, net.n_inputs), NO_SPIKE, np.int32)
+        for row in t:
+            hot = rng.choice(net.n_inputs, size=2, replace=False)
+            row[hot] = rng.integers(0, 12, size=2)
+        streams.append(t)
+    eng = tnn_engine.TNNEngine(
+        params, net, tnn_engine.TNNServeConfig(n_slots=4))
+    results = eng.serve(streams)
+    for stream, result in zip(streams, results):
+        np.testing.assert_array_equal(
+            tnn_engine.reference_outputs(params, net, stream), result)
+    assert eng.stats().get("steps_event", 0) > 0
+    # every sparse compile is keyed (engine, bucket) and carries widths
+    sparse_keys = [k for k in eng._fwd_alt if k[0] == "event"]
+    assert sparse_keys and all(k[1] is not None for k in sparse_keys)
+    widths = network.sparse_widths(net, sparse_keys[0][1])
+    assert widths[0] == sparse_keys[0][1]
+    # l2 reads l1's post-WTA lines: rf=6 over Q=3 blocks -> at most
+    # (6-2)//3 + 2 = 3 active lines, capped at the 2 columns that exist
+    assert widths[1] == 2
+
+
+def test_sparse_widths_structural_bound():
+    l1 = layer.TNNLayer(n_columns=4, rf_size=4, n_neurons=4, threshold=5,
+                        t_steps=16)
+    l2 = layer.TNNLayer(n_columns=2, rf_size=8, n_neurons=2, threshold=4,
+                        t_steps=16)
+    net = network.make_network([l1, l2])
+    assert network.sparse_widths(net, 8) == (8, 3)   # (8-2)//4 + 2 = 3
+    assert network.sparse_widths(net, 0) == (1, 3)   # floor at 1
 
 
 def test_engine_backend_override_rewrites_layers():

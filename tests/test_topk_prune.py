@@ -58,7 +58,7 @@ def test_k_equals_n_is_identity():
 
 def test_pruned_optimal_equals_selection_structure_size():
     # pruned best-known sorters coincide with the direct selection network
-    # where exact lists exist (DESIGN.md §3.5)
+    # where exact lists exist (DESIGN.md §3.6)
     assert topk_network("optimal", 8, 2).num_units == 13
     assert topk_network("optimal", 16, 2).num_units == 29
     assert topk_network("selection", 16, 2).num_units == 29
