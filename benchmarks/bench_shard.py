@@ -1,0 +1,126 @@
+"""Sharded TNN sweep: columns x mesh shape (DESIGN.md §6.4).
+
+Measures one jitted ``network_forward`` gamma cycle for a single-layer
+TNN as the (columns, neurons) plane is sharded over a ``("data",
+"column")`` mesh (`sharding.specs.tnn_mesh`). Every cell is first checked
+bit-exact against the single-device reference — the sharded path must
+never change an output spike time — then timed:
+
+  * mesh ``d1xc1`` — single device, the baseline every row's speedup is
+    relative to (per column count).
+  * column-only / data-only / mixed shapes over all local devices.
+
+On a forced-host-device CPU (CI smoke, this container) the "devices" are
+threads of one chip, so wall-clock *gains* are not expected — the artifact
+pins plumbing cost and becomes a real scaling curve on multi-chip
+backends. Rows carry (n_columns, mesh_data, mesh_column) so the JSON is
+self-describing; trend.py diffs runs shape-by-shape.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_shard [--smoke]
+      (forces XLA_FLAGS=--xla_force_host_platform_device_count=8 unless
+      XLA_FLAGS is already set by the caller)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+# must precede ANY jax import (benchmarks.common imports jax too)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax                                                     # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from benchmarks.common import (emit, note_meta, reset_results,  # noqa: E402
+                               smoke_mode, spike_density, time_fn,
+                               write_json)
+from repro.core import coding, layer, network                  # noqa: E402
+from repro.sharding import compat                              # noqa: E402
+from repro.sharding import specs as SH                         # noqa: E402
+
+
+def sparse_volleys(rng: np.random.Generator, bsz: int, n: int,
+                   t_steps: int, density: float) -> np.ndarray:
+    """(B, n) volleys with ~density spiking lines (times in [0, T))."""
+    t = rng.integers(0, t_steps, size=(bsz, n))
+    silent = rng.random((bsz, n)) >= density
+    return np.where(silent, int(coding.NO_SPIKE), t).astype(np.int32)
+
+
+def mesh_shapes(ndev: int):
+    """(data, column) factorizations to sweep: baseline, column-only,
+    data-only, and the balanced split when one exists."""
+    shapes = [(1, 1)]
+    for cand in [(1, ndev), (ndev, 1)]:
+        if cand not in shapes:
+            shapes.append(cand)
+    d = 2
+    while d * d <= ndev:
+        if ndev % d == 0 and (d, ndev // d) not in shapes:
+            shapes.append((d, ndev // d))
+        d *= 2
+    return shapes
+
+
+def main(smoke: bool = False) -> None:
+    smoke = smoke or smoke_mode()
+    reset_results()
+    ndev = jax.device_count()
+    if smoke:
+        columns, bsz, rf, q, t_steps = (8,), 8, 4, 4, 16
+        iters = 3
+    else:
+        columns, bsz, rf, q, t_steps = (16, 64), 32, 16, 16, 64
+        iters = 10
+    threshold, k, density = 9, 2, 0.25
+    rng = np.random.default_rng(0)
+    note_meta(n_devices=ndev, batch=bsz, rf_size=rf, n_neurons=q,
+              t_steps=t_steps, mesh_shapes=mesh_shapes(ndev),
+              columns=list(columns), backend="closed_form")
+
+    for n_col in columns:
+        cfg = layer.TNNLayer(
+            n_columns=n_col, rf_size=rf, n_neurons=q, threshold=threshold,
+            t_steps=t_steps, dendrite="catwalk", k=k,
+            backend="closed_form")
+        net = network.make_network([cfg])
+        params = network.init_network(jax.random.PRNGKey(0), net)
+        v = sparse_volleys(rng, bsz, net.n_inputs, t_steps, density)
+        ref = np.asarray(network.network_forward(params, v, net)[0])
+        base_us = None
+        for n_data, n_column in mesh_shapes(ndev):
+            if n_data * n_column > ndev:
+                continue
+            single = n_data == n_column == 1
+            mesh = SH.tnn_mesh(n_column, n_data)
+            sp = (params if single
+                  else network.init_network(jax.random.PRNGKey(0), net,
+                                            mesh=mesh))
+            fwd = jax.jit(lambda p, x: network.network_forward(p, x, net)[0])
+            with compat.set_mesh(mesh):
+                vs = jax.device_put(
+                    v, network.data_sharding(net, mesh, bsz))
+                got = np.asarray(fwd(sp, vs))
+                if not np.array_equal(got, ref):   # sharding must be inert
+                    raise AssertionError(
+                        f"sharded output diverges at C={n_col} "
+                        f"mesh=({n_data},{n_column})")
+                us = time_fn(fwd, sp, vs, iters=iters)
+            if single:
+                base_us = us
+            speedup = base_us / us if base_us else 0.0
+            emit(f"shard/C{n_col}_d{n_data}xc{n_column}",
+                 us, f"{speedup:.2f}x_vs_single_device",
+                 n_columns=n_col, mesh_data=n_data, mesh_column=n_column,
+                 density=spike_density(v))
+    write_json("shard", smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI plumbing validation")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

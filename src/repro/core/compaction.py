@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coding
+from repro.sharding import compat
 
 
 def active_mask(times: jax.Array, t_steps: int) -> jax.Array:
@@ -56,7 +57,7 @@ def measured_density(times, t_steps: int | None = None):
     engine) can branch on it; under ``jit`` the value is unknowable, hence
     ``None``.
     """
-    if isinstance(times, jax.core.Tracer):
+    if compat.is_tracer(times):
         return None
     times = jnp.asarray(times)
     if times.size == 0:
@@ -67,7 +68,7 @@ def measured_density(times, t_steps: int | None = None):
 
 def max_active(times, t_steps: int):
     """Max per-volley active-line count, or ``None`` under tracing."""
-    if isinstance(times, jax.core.Tracer):
+    if compat.is_tracer(times):
         return None
     mask = active_mask(times, t_steps)
     if mask.size == 0:
@@ -132,7 +133,7 @@ def compact_volleys(times: jax.Array, t_steps: int,
     mask = active_mask(times, t_steps)
     n_act = jnp.sum(mask.astype(jnp.int32), axis=-1)
     if n_active_max is None:
-        if isinstance(times, jax.core.Tracer):
+        if compat.is_tracer(times):
             raise ValueError(
                 "compact_volleys under jit needs a static n_active_max "
                 "(measure + bucket_width outside the traced region)")

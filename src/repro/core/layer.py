@@ -32,6 +32,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coding, compaction, neuron, stdp
+from repro.sharding import compat
+from repro.sharding import specs as sharding_specs
+
+#: axis entries for the in-layer sharding constraints (identity when no
+#: mesh is active — see sharding.specs.maybe_wsc / tnn_volley_axes)
+_COL, _DP, _ = sharding_specs.tnn_volley_axes()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +124,7 @@ def layer_input_density(volleys: jax.Array, cfg: TNNLayer):
     density the neuron banks actually see, the quantity the ``auto``
     backend policy branches on (:func:`repro.core.neuron.resolve_backend`).
     """
-    if isinstance(volleys, jax.core.Tracer):
+    if compat.is_tracer(volleys):
         return None
     v = volleys[None, :] if volleys.ndim == 1 else volleys
     return compaction.measured_density(_gather_rf(v, cfg), cfg.t_steps)
@@ -142,17 +148,23 @@ def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer
         volleys = volleys[None, :]
     w_int = jnp.round(weights).astype(jnp.int32)
     times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
+    # under an active mesh, pin the (columns, neurons) plane: columns over
+    # "column", batch over DP (DESIGN.md §6.4; identity without a mesh)
+    times_rf = sharding_specs.maybe_wsc(times_rf, _COL, _DP, None)
     fire = neuron.fire_times_bank(times_rf, w_int, cfg.neuron_config(),
                                   backend=cfg.backend,
                                   n_active_max=cfg.n_active_max)  # (C, B, Q)
+    fire = sharding_specs.maybe_wsc(fire, _COL, _DP, None)
     fire = jnp.swapaxes(fire, 0, 1)                           # (B, C, Q)
     # vectorized 1-WTA over the (B, C) plane; argmin's first-minimum rule
     # is the tie-break-to-lowest-index priority encoder.
     any_fire = jnp.any(coding.is_spike(fire), axis=-1)        # (B, C)
     winners = jnp.argmin(fire, axis=-1).astype(jnp.int32)
     winners = jnp.where(any_fire, winners, -1)
+    winners = sharding_specs.maybe_wsc(winners, _DP, _COL)
     lane = jnp.arange(cfg.n_neurons, dtype=jnp.int32)
     out = jnp.where(lane == winners[..., None], fire, coding.NO_SPIKE)
+    out = sharding_specs.maybe_wsc(out, _DP, _COL, None)
     if single:
         return out[0], winners[0]
     return out, winners
@@ -171,6 +183,7 @@ def layer_step(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer,
         volleys = volleys[None, :]
     out_times, winners = layer_forward(weights, volleys, cfg)
     times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
+    times_rf = sharding_specs.maybe_wsc(times_rf, _COL, _DP, None)
     out_cb = jnp.swapaxes(out_times, 0, 1)                    # (C, B, Q)
     win_cb = jnp.swapaxes(winners, 0, 1)                      # (C, B)
     ckeys = (jax.random.split(key, cfg.n_columns)

@@ -20,8 +20,10 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core import layer as layer_mod
+from repro.sharding import specs as sharding_specs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,10 +53,34 @@ def make_network(layers: Sequence[layer_mod.TNNLayer]) -> TNNNetwork:
     return TNNNetwork(layers=tuple(layers))
 
 
-def init_network(key: jax.Array, cfg: TNNNetwork) -> Tuple[jax.Array, ...]:
+def param_shardings(cfg: TNNNetwork, mesh: Mesh
+                    ) -> Tuple[NamedSharding, ...]:
+    """Per-layer NamedShardings for the (C_l, Q_l, rf_l) weight stacks:
+    columns over the ``column`` axis, replication fallback when C_l does
+    not divide it (DESIGN.md §6.4)."""
+    return tuple(
+        NamedSharding(mesh, sharding_specs.tnn_param_pspec(mesh,
+                                                           lc.n_columns))
+        for lc in cfg.layers)
+
+
+def data_sharding(cfg: TNNNetwork, mesh: Mesh, batch: int) -> NamedSharding:
+    """Sharding for a (B, n_inputs) input volley batch: B over ``data``."""
+    del cfg  # shape-independent; kept for signature symmetry
+    return NamedSharding(mesh, sharding_specs.tnn_batch_pspec(mesh, batch))
+
+
+def init_network(key: jax.Array, cfg: TNNNetwork,
+                 mesh: Optional[Mesh] = None) -> Tuple[jax.Array, ...]:
+    """Random per-layer weights; with ``mesh`` each layer's (C, Q, rf)
+    stack is placed under its :func:`param_shardings` layout (init itself
+    stays replicated math — bit-identical to the unsharded init)."""
     keys = jax.random.split(key, len(cfg.layers))
-    return tuple(layer_mod.init_layer(k, lc)
-                 for k, lc in zip(keys, cfg.layers))
+    params = tuple(layer_mod.init_layer(k, lc)
+                   for k, lc in zip(keys, cfg.layers))
+    if mesh is not None:
+        params = jax.device_put(params, param_shardings(cfg, mesh))
+    return params
 
 
 def network_forward(params: Sequence[jax.Array], volleys: jax.Array,

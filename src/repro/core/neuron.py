@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import coding, compaction, unary_ops
 from repro.core.topk_prune import topk_network
+from repro.sharding import compat
 
 DendriteKind = Literal["pc_conventional", "pc_compact", "sorting_pc", "catwalk"]
 
@@ -283,6 +284,32 @@ def pallas_available() -> bool:
         return False
 
 
+def mesh_active() -> bool:
+    """Whether an ambient device mesh is entered (compat.set_mesh).
+
+    The Pallas engines have no validated Mosaic lowering under a sharded
+    (column-partitioned) operand layout yet, so ``fire_times_bank``
+    degrades them to the bit-exact jnp engines while a mesh is active
+    (DESIGN.md §6.4); the jnp engines are sharding-transparent and keep
+    the layout the layer constraints pin.
+    """
+    am = compat.get_abstract_mesh()
+    return am is not None and bool(am.axis_names)
+
+
+def effective_engine(engine: str) -> str:
+    """The engine :func:`fire_times_bank` will actually run for ``engine``
+    given the ambient mesh: under an active mesh the Pallas engines
+    degrade to the bit-exact jnp engine of the same sparsity class (see
+    :func:`mesh_active`); everything else passes through. Callers that
+    report per-engine stats (the serve engine) use this so observability
+    matches execution.
+    """
+    if engine in ("pallas", "pallas_compact") and mesh_active():
+        return "event" if engine == "pallas_compact" else "closed_form"
+    return engine
+
+
 def resolve_backend(backend: Backend, density: Optional[float] = None) -> str:
     """Resolve ``auto`` to a concrete engine; explicit names pass through.
 
@@ -297,7 +324,8 @@ def resolve_backend(backend: Backend, density: Optional[float] = None) -> str:
     """
     if backend != "auto":
         return backend
-    if jax.default_backend() == "tpu" and pallas_available():
+    if jax.default_backend() == "tpu" and pallas_available() \
+            and not mesh_active():
         return "pallas"
     if density is not None and density <= DENSITY_EVENT_MAX:
         return "event"
@@ -377,15 +405,28 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
       inputs.
     """
     times, weights = _bank_shapes(times, weights)
+    if times.ndim == 3:
+        # column-stack form: pin the incoming sharded layout (columns over
+        # "column", volleys over DP) so the jnp engines' broadcasts keep
+        # the partition instead of all-gathering; identity without a mesh.
+        from repro.sharding import specs as sharding_specs
+        col, dp, _ = sharding_specs.tnn_volley_axes()
+        times = sharding_specs.maybe_wsc(times, col, dp, None)
+        weights = sharding_specs.maybe_wsc(weights, col, None, None)
     k = clip_k(cfg)
     # measure density only where the policy can use it: explicit backends
     # ignore it, and when resolve_backend will pick pallas before looking
     # (TPU with the kernel importable) skip the reduction + host sync
     density = None
     if backend == "auto" and not (jax.default_backend() == "tpu"
-                                  and pallas_available()):
+                                  and pallas_available()
+                                  and not mesh_active()):
         density = compaction.measured_density(times, cfg.t_steps)
-    engine = resolve_backend(backend, density=density)
+    # explicit Pallas under an active mesh: no validated sharded Mosaic
+    # lowering yet — degrade to the bit-exact jnp engine of the same
+    # sparsity class (DESIGN.md §6.4). "auto" never degrades here
+    # (resolve_backend skips pallas while a mesh is entered).
+    engine = effective_engine(resolve_backend(backend, density=density))
 
     if engine in ("pallas", "pallas_compact"):
         # an explicit pallas request must not silently degrade — only
@@ -413,7 +454,7 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
             threshold=cfg.threshold, k=k)
 
     if engine == "event":
-        if n_active_max is not None or not isinstance(times, jax.core.Tracer):
+        if n_active_max is not None or not compat.is_tracer(times):
             comp, w_c = _compact_bank(times, weights, cfg.t_steps,
                                       n_active_max, engine)
             return fire_times_event(comp.times[..., :, None, :], w_c,
@@ -446,7 +487,7 @@ def _compact_bank(times: jax.Array, weights: jax.Array, t_steps: int,
     """Shared compaction pre-pass for the sparse engines: relocate active
     lines to a dense prefix and gather weights to match. Returns
     ``(CompactVolleys, weights (..., B, Q, s))``."""
-    if n_active_max is None and isinstance(times, jax.core.Tracer):
+    if n_active_max is None and compat.is_tracer(times):
         raise ValueError(
             f"backend={engine!r} under jit needs a static n_active_max "
             "(measure max_active + bucket_width outside the traced region)")
@@ -454,7 +495,7 @@ def _compact_bank(times: jax.Array, weights: jax.Array, t_steps: int,
     # a forced width that drops active lines would silently corrupt fire
     # times; fail loudly where we can see the data (traced callers must
     # guarantee their static width covers the batch — see bucket_width)
-    if not isinstance(comp.overflow, jax.core.Tracer):
+    if not compat.is_tracer(comp.overflow):
         dropped = int(jnp.max(comp.overflow)) if comp.overflow.size else 0
         if dropped > 0:
             raise ValueError(

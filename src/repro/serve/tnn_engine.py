@@ -45,6 +45,7 @@ Front doors:
 from __future__ import annotations
 
 import asyncio
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence
@@ -52,9 +53,11 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import coding, compaction, network, neuron
 from repro.serve import slots
+from repro.sharding import compat
 
 #: neuron-bank engines that consume a static compaction width under jit
 SPARSE_ENGINES = ("event", "pallas_compact")
@@ -121,20 +124,41 @@ class TNNEngine:
         params: Sequence[jax.Array],
         net: network.TNNNetwork,
         scfg: Optional[TNNServeConfig] = None,
+        mesh: Optional[Mesh] = None,
     ):
         scfg = scfg or TNNServeConfig()
         if scfg.backend != "auto":
-            net = network.make_network(
-                [dataclasses.replace(lc, backend=scfg.backend) for lc in net.layers]
-            )
+            # pin only the layers that delegated the choice: explicit
+            # per-layer backends are respected (mirrors _fwd_for)
+            layers = [
+                lc if lc.backend != "auto" else dataclasses.replace(lc, backend=scfg.backend)
+                for lc in net.layers
+            ]
+            net = network.make_network(layers)
         self.net = net
         self.scfg = scfg
-        self.params = tuple(jnp.asarray(p) for p in params)
+        #: optional ("data", "column") device mesh (sharding.specs.tnn_mesh):
+        #: weights live column-sharded, each step's slot batch is placed
+        #: under the data spec, and the jitted stack traces inside the mesh
+        #: scope so the layer constraints bind (DESIGN.md §6.4)
+        self.mesh = mesh
+        if mesh is not None:
+            self.params = jax.device_put(
+                tuple(jnp.asarray(p) for p in params),
+                network.param_shardings(net, mesh),
+            )
+            self._batch_sharding = network.data_sharding(net, mesh, scfg.n_slots)
+        else:
+            self.params = tuple(jnp.asarray(p) for p in params)
+            self._batch_sharding = None
         self.pool: slots.SlotPool[TNNRequest] = slots.SlotPool(scfg.n_slots)
         self._fwd = jax.jit(lambda p, v: network.network_forward(p, v, net)[0])
         # density-less resolution = the engine self._fwd compiles to; the
         # per-step density policy swaps in a sparse engine via _fwd_for
-        self._default_engine = neuron.resolve_backend(scfg.backend)
+        # (resolved inside the mesh scope so TPU+mesh never defaults to the
+        # Pallas engines the sharded layout can't run yet)
+        with self._mesh_scope():
+            self._default_engine = neuron.effective_engine(neuron.resolve_backend(scfg.backend))
         self._fwd_alt: Dict[tuple, object] = {}
         self._t_steps = net.layers[0].t_steps
         # layer-0 receptive-field line ids, host-side: the per-step sparse
@@ -173,11 +197,34 @@ class TNNEngine:
             )
         if volleys.shape[0] == 0:
             raise ValueError("empty volley stream")
+        if (volleys < 0).any():
+            # negative times would silently count as "active" in the density
+            # measurement and violate the event engine's breakpoint-sort
+            # contract (spike times are ticks in [0, T) or NO_SPIKE)
+            raise ValueError(
+                "volleys must be non-negative spike times "
+                f"(NO_SPIKE={NO_SPIKE} for silent lines); got min "
+                f"{int(volleys.min())}"
+            )
         density = float(np.mean(volleys < self._t_steps))
         req = TNNRequest(req_id=self._next_id, volleys=volleys, density=density)
         self._next_id += 1
         self.pool.submit(req)
         return req
+
+    def _mesh_scope(self):
+        """Ambient-mesh context for jit trace/execute; no-op without one."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return compat.set_mesh(self.mesh)
+
+    def _place(self, batch: np.ndarray) -> jax.Array:
+        """Host batch -> device(s): under a mesh the (B, n_inputs) block is
+        placed batch-over-``data`` before the jit boundary (the density and
+        width measurements above stay host-side, on the numpy batch)."""
+        if self._batch_sharding is None:
+            return jnp.asarray(batch)
+        return jax.device_put(batch, self._batch_sharding)
 
     def _layer0_width(self, batch: np.ndarray) -> int:
         """Bucketed max active-line count over the batch's layer-0
@@ -238,13 +285,22 @@ class TNNEngine:
         # it): NO_SPIKE-padded free slots count as silent lines, which is
         # precisely why partially-filled batches resolve to the event path
         density = float(np.mean(batch < self._t_steps))
-        engine = neuron.resolve_backend(self.scfg.backend, density=density)
-        self._density_sum += density
-        self._backend_steps[engine] = self._backend_steps.get(engine, 0) + 1
-        # sparse engines compile against a static compaction width measured
-        # from this batch's own receptive-field view (exact, never drops)
-        width = self._layer0_width(batch) if engine in SPARSE_ENGINES else None
-        out = np.asarray(self._fwd_for(engine, width)(self.params, jnp.asarray(batch)))
+        with self._mesh_scope():
+            # resolution inside the mesh scope: the auto policy must see the
+            # mesh (neuron.mesh_active) so it never picks the Pallas engines
+            # while the operands are column/data-sharded; effective_engine
+            # maps an explicit Pallas request to the engine that will
+            # actually run, so stats/jit-variants record the truth
+            engine = neuron.effective_engine(
+                neuron.resolve_backend(self.scfg.backend, density=density)
+            )
+            self._density_sum += density
+            self._backend_steps[engine] = self._backend_steps.get(engine, 0) + 1
+            # sparse engines compile against a static compaction width
+            # measured from this batch's own receptive-field view (exact,
+            # never drops)
+            width = self._layer0_width(batch) if engine in SPARSE_ENGINES else None
+            out = np.asarray(self._fwd_for(engine, width)(self.params, self._place(batch)))
         retired: List[TNNRequest] = []
         for idx, entry in live:
             req = entry.item

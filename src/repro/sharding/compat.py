@@ -12,6 +12,24 @@ from __future__ import annotations
 
 import jax
 
+# jax.core.Tracer is deprecated (removed on the CI matrix's "latest jax"
+# leg); the private path is stable across every version we support and
+# avoids the DeprecationWarning the public alias emits on 0.5+.
+try:
+    from jax._src.core import Tracer as _Tracer
+except Exception:  # pragma: no cover - future jax reshuffles
+    _Tracer = jax.core.Tracer
+
+
+def is_tracer(x) -> bool:
+    """True when ``x`` is a jax tracer (host-side measurement impossible).
+
+    The version-stable replacement for ``isinstance(x, jax.core.Tracer)``
+    — use this everywhere host-side policy code needs to branch on
+    concreteness (density measurement, compaction width selection).
+    """
+    return isinstance(x, _Tracer)
+
 
 def get_abstract_mesh():
     """The active mesh (entered via :func:`set_mesh`) or None.

@@ -54,7 +54,7 @@ def _fit(mesh: Mesh, dim: int, axis: Axis) -> Axis:
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     names = mesh.axis_names
-    return tuple(a for a in ("pod", "data") if a in names)
+    return tuple(a for a in dp_spec_names() if a in names)
 
 
 def _leaf_name(path) -> str:
@@ -226,3 +226,80 @@ def maybe_wsc(x, *spec):
 def dp_spec_names() -> tuple:
     """The DP axis group for in-model constraints."""
     return ("pod", "data")
+
+
+# ------------------------------------------------------------ TNN rules
+# The TNN stack scales by tiling RNL columns side by side (the paper's
+# silicon replicates column hardware across the die); the software
+# analogue shards the (columns, neurons) plane over a ``column`` mesh
+# axis and the volley batch over ``data`` (DESIGN.md §6.4):
+#
+#   tensor                      shape         spec
+#   ------------------------    -----------   --------------------------
+#   layer weights               (C, Q, rf)    P(column, None, None)
+#   post-gather volleys         (C, B, rf)    P(column, data, None)
+#   bank fire times             (C, B, Q)     P(column, data, None)
+#   post-WTA / winners          (B, C, ...)   P(data, column, ...)
+#   input volley batch          (B, n_in)     P(data, None)
+#
+# Every rule runs through ``_fit``: a column count (or batch) that the
+# axis does not divide degrades that dim to replication, so the same
+# rule set compiles unchanged on CPU / single-device (no mesh: the
+# in-model constraints are identity via ``maybe_wsc``).
+
+#: mesh axis carrying the (columns, neurons) plane
+TNN_COLUMN_AXIS = "column"
+
+
+def tnn_mesh(n_column: int | None = None, n_data: int = 1, *,
+             devices=None) -> Mesh:
+    """Mesh with ``("data", "column")`` axes over the local devices.
+
+    ``n_column`` defaults to all devices not consumed by ``n_data``; a
+    1x1 mesh (single device) is valid and makes every rule replicate.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if n_data <= 0:
+        raise ValueError(f"n_data must be positive, got {n_data}")
+    if n_column is None:
+        if len(devices) % n_data:
+            raise ValueError(
+                f"n_data={n_data} does not divide {len(devices)} devices")
+        n_column = len(devices) // n_data
+    if n_column <= 0:
+        raise ValueError(f"n_column must be positive, got {n_column}")
+    need = n_data * n_column
+    if need > len(devices):
+        raise ValueError(f"mesh ({n_data}, {n_column}) needs {need} "
+                         f"devices, have {len(devices)}")
+    dev = np.asarray(devices[:need]).reshape(n_data, n_column)
+    return Mesh(dev, ("data", TNN_COLUMN_AXIS))
+
+
+def tnn_param_pspec(mesh: Mesh, n_columns: int) -> P:
+    """Layer weights (C, Q, rf): columns over ``column``, else replicate."""
+    return P(_fit(mesh, n_columns, TNN_COLUMN_AXIS), None, None)
+
+
+def tnn_volley_axes() -> tuple:
+    """``maybe_wsc`` axis entries for column-stacked volley tensors
+    ``(C, B, ...)`` — the single encoding of the post-gather rule; the
+    in-layer/in-bank constraints and :func:`tnn_data_pspec` both derive
+    from it, so the rule cannot drift between the two."""
+    return (TNN_COLUMN_AXIS, dp_spec_names(), None)
+
+
+def tnn_data_pspec(mesh: Mesh, n_columns: int, batch: int) -> P:
+    """Post-gather volley tensor (C, B, rf): columns over ``column``,
+    batch over the DP group; either dim degrades independently. For
+    callers that materialize the receptive-field gather *outside* jit and
+    place it themselves — the in-jit path constrains the same tensor via
+    ``maybe_wsc(*tnn_volley_axes())``, which this derives from."""
+    col, _, _ = tnn_volley_axes()
+    return P(_fit(mesh, n_columns, col),
+             _fit(mesh, batch, dp_axes(mesh)), None)
+
+
+def tnn_batch_pspec(mesh: Mesh, batch: int) -> P:
+    """Input volley batch (B, n_inputs): batch over the DP group."""
+    return batch_pspec(mesh, batch, extra_dims=1)

@@ -161,6 +161,12 @@ def test_engine_stats_and_validation():
         eng.submit(np.zeros((2, net.n_inputs + 1), np.int32))
     with pytest.raises(ValueError):
         eng.submit(np.zeros((0, net.n_inputs), np.int32))
+    # negative spike times would corrupt the density measurement and feed
+    # the event engine's breakpoint sort out of contract — reject
+    bad = np.zeros((1, net.n_inputs), np.int32)
+    bad[0, 0] = -3
+    with pytest.raises(ValueError, match="non-negative"):
+        eng.submit(bad)
     eng.serve(_streams(net, 4))
     st = eng.stats()
     assert st["n_retired"] == 4.0
@@ -281,3 +287,24 @@ def test_engine_backend_override_rewrites_layers():
     eng2 = tnn_engine.TNNEngine(
         _params(net), net, tnn_engine.TNNServeConfig(n_slots=2))
     assert eng2.net is net
+
+
+def test_engine_backend_override_respects_explicit_layers():
+    """An engine-level backend pins only backend="auto" layers — explicit
+    per-layer choices survive (regression: __init__ used to clobber every
+    layer, contradicting _fwd_for's documented contract)."""
+    l1 = layer.TNNLayer(n_columns=2, rf_size=4, n_neurons=3, threshold=5,
+                        t_steps=12, dendrite="catwalk", k=2, backend="scan")
+    l2 = layer.TNNLayer(n_columns=1, rf_size=6, n_neurons=2, threshold=4,
+                        t_steps=12, dendrite="catwalk", k=2)  # auto
+    net = network.make_network([l1, l2])
+    params = _params(net)
+    eng = tnn_engine.TNNEngine(
+        params, net,
+        tnn_engine.TNNServeConfig(n_slots=2, backend="closed_form"))
+    assert [lc.backend for lc in eng.net.layers] == ["scan", "closed_form"]
+    # and the mixed network still serves bit-exact
+    streams = _streams(net, 3, seed=11)
+    for stream, result in zip(streams, eng.serve(streams)):
+        np.testing.assert_array_equal(
+            tnn_engine.reference_outputs(params, net, stream), result)

@@ -91,6 +91,31 @@ def test_fit_prefix_fallback():
     assert SH._fit(MESH3, 3, ("pod", "data")) is None
 
 
+TNN_MESH = FakeMesh({"data": 2, "column": 4})
+
+
+def test_tnn_param_pspec_column_axis():
+    # C=8 divides the 4-way column axis -> sharded; C=5 -> replicated
+    assert SH.tnn_param_pspec(TNN_MESH, 8) == P("column", None, None)
+    assert SH.tnn_param_pspec(TNN_MESH, 5) == P(None, None, None)
+
+
+def test_tnn_data_pspec_independent_fallbacks():
+    # (C, B, rf): each dim degrades to replication independently
+    assert SH.tnn_data_pspec(TNN_MESH, 8, 6) == P("column", "data", None)
+    assert SH.tnn_data_pspec(TNN_MESH, 5, 6) == P(None, "data", None)
+    assert SH.tnn_data_pspec(TNN_MESH, 8, 3) == P("column", None, None)
+    assert SH.tnn_data_pspec(TNN_MESH, 5, 3) == P(None, None, None)
+
+
+def test_tnn_batch_pspec_over_data():
+    assert SH.tnn_batch_pspec(TNN_MESH, 6) == P("data", None)
+    assert SH.tnn_batch_pspec(TNN_MESH, 3) == P(None, None)
+    # a pod axis folds into the DP group like the LM rules
+    mesh3 = FakeMesh({"pod": 2, "data": 2, "column": 4})
+    assert SH.tnn_batch_pspec(mesh3, 8) == P(("pod", "data"), None)
+
+
 def test_cache_pspec_kv_heads():
     path = (jax.tree_util.GetAttrKey("layer_caches"),
             jax.tree_util.GetAttrKey("k"))

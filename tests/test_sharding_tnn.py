@@ -1,0 +1,215 @@
+"""Sharded TNN path (DESIGN.md §6.4): bit-exactness of the mesh-aware
+(columns, neurons) plane vs the single-device path.
+
+Needs >1 device, so each test runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (same isolation
+contract as tests/test_distribution.py — the main test process must keep
+seeing one device). The CI ``shard-tests`` job runs this module under the
+same flag at the job level.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+#: shared preamble: a 2-layer network (divisible C: 8 -> 4 on a 4-way
+#: column axis) + a non-divisible single-layer net (C=5 -> replication
+#: fallback), sparse volley batch, single-device reference outputs.
+SETUP = """
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.core import coding, layer, network, neuron
+    from repro.sharding import compat
+    from repro.sharding import specs as SH
+
+    assert jax.device_count() == 8, jax.devices()
+    NS = int(coding.NO_SPIKE)
+
+    def sparse_volleys(rng, bsz, n, t_max=20, t_steps=12):
+        t = rng.integers(0, t_max, size=(bsz, n))
+        return np.where(t >= t_steps, NS, t).astype(np.int32)
+
+    l1 = layer.TNNLayer(n_columns=8, rf_size=4, n_neurons=3, threshold=5,
+                        t_steps=12, dendrite="catwalk", k=2)
+    l2 = layer.TNNLayer(n_columns=4, rf_size=6, n_neurons=4, threshold=4,
+                        t_steps=12, dendrite="catwalk", k=2)
+    net = network.make_network([l1, l2])
+    odd = network.make_network([dataclasses.replace(l1, n_columns=5)])
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    podd = network.init_network(jax.random.PRNGKey(1), odd)
+    rng = np.random.default_rng(0)
+    v = sparse_volleys(rng, 8, net.n_inputs)
+    vodd = sparse_volleys(rng, 8, odd.n_inputs)
+    mesh = SH.tnn_mesh(4, 2)                       # (data=2, column=4)
+"""
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(SETUP) + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_layer_and_network_bit_exact_all_backends():
+    """layer_forward + network_forward on a (2, 4) mesh == single device
+    for every jnp engine, including the non-divisible column fallback."""
+    print(_run("""
+        for backend in ("scan", "closed_form", "event"):
+            for cfg0, ps in ((net, params), (odd, podd)):
+                bnet = network.make_network(
+                    [dataclasses.replace(lc, backend=backend)
+                     for lc in cfg0.layers])
+                sp = jax.device_put(ps, network.param_shardings(bnet, mesh))
+                fwd = jax.jit(
+                    lambda p, x, n=bnet: network.network_forward(p, x, n))
+                # property-style: several random draws, incl. an all-silent
+                # and a fully-dense volley batch (padding/no-WTA edges)
+                draws = [sparse_volleys(np.random.default_rng(s), 8,
+                                        cfg0.n_inputs) for s in range(3)]
+                draws.append(np.full((8, cfg0.n_inputs), NS, np.int32))
+                draws.append(np.asarray(
+                    np.random.default_rng(7).integers(
+                        0, 12, size=(8, cfg0.n_inputs)), np.int32))
+                for volleys in draws:
+                    ref, ref_win = network.network_forward(ps, volleys,
+                                                           bnet)
+                    ref = np.asarray(ref)
+                    with compat.set_mesh(mesh):
+                        vs = jax.device_put(
+                            volleys, network.data_sharding(bnet, mesh,
+                                                           volleys.shape[0]))
+                        out, win = fwd(sp, vs)
+                    np.testing.assert_array_equal(np.asarray(out), ref)
+                    for w_ref, w_sh in zip(ref_win, win):
+                        np.testing.assert_array_equal(np.asarray(w_sh),
+                                                      np.asarray(w_ref))
+        print('SHARDED_FWD_BIT_EXACT_OK')
+    """))
+
+
+def test_sharded_layer_step_training_bit_exact():
+    """layer_step (forward + minibatch STDP) matches on the mesh: the
+    training path inherits the same constraints as the forward path."""
+    print(_run("""
+        w = jnp.round(params[0]).astype(jnp.float32)
+        ref_w, ref_out, ref_win = layer.layer_step(w, jnp.asarray(v), l1)
+        sw = jax.device_put(w, network.param_shardings(net, mesh)[0])
+        with compat.set_mesh(mesh):
+            vs = jax.device_put(v, network.data_sharding(net, mesh, 8))
+            new_w, out, win = jax.jit(
+                lambda p, x: layer.layer_step(p, x, l1))(sw, vs)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_out))
+        np.testing.assert_array_equal(np.asarray(win), np.asarray(ref_win))
+        np.testing.assert_allclose(np.asarray(new_w), np.asarray(ref_w),
+                                   rtol=1e-6, atol=1e-6)
+        print('SHARDED_STEP_BIT_EXACT_OK')
+    """))
+
+
+def test_sharded_engine_serve_bit_exact():
+    """TNNEngine.serve with a mesh == unbatched single-device reference;
+    the auto policy keeps re-resolving per step (density measured on the
+    host batch before placement)."""
+    print(_run("""
+        from repro.serve import tnn_engine
+        streams = [v[:3], v[3:6], v[6:], v[1:2]]
+        eng = tnn_engine.TNNEngine(
+            params, net, tnn_engine.TNNServeConfig(n_slots=3), mesh=mesh)
+        results = eng.serve(streams)
+        for s, r in zip(streams, results):
+            np.testing.assert_array_equal(
+                tnn_engine.reference_outputs(params, net, s), r)
+        st = eng.stats()
+        assert st['n_retired'] == 4.0
+        assert any(key.startswith('steps_') for key in st)
+        print('SHARDED_ENGINE_BIT_EXACT_OK')
+    """))
+
+
+def test_pallas_backends_degrade_under_mesh():
+    """Explicit pallas/pallas_compact requests under an active mesh run the
+    bit-exact jnp engines (no sharded Mosaic lowering yet); auto never
+    resolves to pallas while a mesh is entered."""
+    print(_run("""
+        cfgn = l1.neuron_config()
+        times_rf = jnp.swapaxes(jnp.asarray(v)[:, l1.rf_index()], 0, 1)
+        w = jnp.round(params[0]).astype(jnp.int32)
+        ref = np.asarray(neuron.fire_times_bank(times_rf, w, cfgn,
+                                                backend='closed_form'))
+        with compat.set_mesh(mesh):
+            assert neuron.mesh_active()
+            for backend in ('pallas', 'pallas_compact', 'auto'):
+                got = neuron.fire_times_bank(times_rf, w, cfgn,
+                                             backend=backend)
+                np.testing.assert_array_equal(np.asarray(got), ref)
+            assert neuron.resolve_backend('auto') != 'pallas'
+            assert neuron.effective_engine('pallas') == 'closed_form'
+            assert neuron.effective_engine('pallas_compact') == 'event'
+        assert not neuron.mesh_active()
+        assert neuron.effective_engine('pallas') == 'pallas'
+        # the serve engine's per-engine stats report the degraded engine,
+        # not the requested one
+        from repro.serve import tnn_engine
+        eng = tnn_engine.TNNEngine(
+            params, net,
+            tnn_engine.TNNServeConfig(n_slots=2, backend='pallas'),
+            mesh=mesh)
+        eng.serve([v[:2]])
+        st = eng.stats()
+        assert 'steps_pallas' not in st and st['steps_closed_form'] > 0, st
+        print('PALLAS_MESH_FALLBACK_OK')
+    """))
+
+
+def test_sharded_init_network_matches_unsharded():
+    """init_network(mesh=...) is bit-identical to the unsharded init and
+    places each layer under its column spec (replication when C doesn't
+    divide the axis)."""
+    print(_run("""
+        from jax.sharding import PartitionSpec as P
+        sp = network.init_network(jax.random.PRNGKey(0), net, mesh=mesh)
+        for a, b in zip(sp, params):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert sp[0].sharding.spec == P('column', None, None)   # C=8 % 4 == 0
+        so = network.init_network(jax.random.PRNGKey(1), odd, mesh=mesh)
+        assert so[0].sharding.spec == P(None, None, None)       # C=5 -> repl
+        print('SHARDED_INIT_OK')
+    """))
+
+
+def test_tnn_mesh_factory_validation():
+    """tnn_mesh shapes + error paths (needs the 8 fake devices)."""
+    print(_run("""
+        m = SH.tnn_mesh()                       # all devices on column
+        assert dict(m.shape) == {'data': 1, 'column': 8}
+        m = SH.tnn_mesh(2, 4)
+        assert dict(m.shape) == {'data': 4, 'column': 2}
+        try:
+            SH.tnn_mesh(n_data=3)               # 3 does not divide 8
+        except ValueError:
+            pass
+        else:
+            raise AssertionError('expected ValueError')
+        try:
+            SH.tnn_mesh(16, 1)                  # more than available
+        except ValueError:
+            pass
+        else:
+            raise AssertionError('expected ValueError')
+        for bad in ((0, 1), (4, 0), (-2, 1)):   # zero-size axes rejected
+            try:
+                SH.tnn_mesh(*bad)
+            except ValueError:
+                pass
+            else:
+                raise AssertionError(f'expected ValueError for {bad}')
+        print('TNN_MESH_FACTORY_OK')
+    """))
