@@ -1,0 +1,116 @@
+"""Gamma-cycle pipelining sweep: depth x micro-batch count (DESIGN.md §5.4).
+
+Times one jitted gamma cycle for TNN stacks of increasing depth, barriered
+(``network_forward``: the whole batch crosses layer l before layer l+1
+starts) vs software-pipelined (``network_forward_pipelined``: M
+micro-batches stream through the stack, layer l on micro-batch t while
+layer l+1 works micro-batch t-1). Every pipelined cell is first checked
+bit-exact against the barriered reference — the schedule must never change
+an output spike time — then timed; rows report speedup vs the same-depth
+barriered baseline.
+
+The default engine is ``scan`` — the cycle-accurate hardware mirror, and
+the one whose per-tick working set ``(C, B, Q, rf)`` pipelining shrinks by
+M: at paper-scale widths the barriered tick tensors fall out of cache
+while a micro-batch stays resident, which is where the >1.2x wins on deep
+stacks come from (the pipeline bubble costs (M+L-1)/M extra tick work, so
+M must be large enough to amortize its own warmup/drain). A
+``closed_form`` section is included for the dense-engine trend.
+
+Rows carry (depth, microbatches, batch) so the JSON artifact is
+self-describing; trend.py diffs runs cell by cell.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_pipeline [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (emit, note_meta, reset_results, smoke_mode,
+                               spike_density, time_fn, write_json)
+from repro.core import coding, layer, network
+
+
+def sparse_volleys(rng: np.random.Generator, bsz: int, n: int,
+                   t_steps: int, density: float) -> np.ndarray:
+    """(B, n) volleys with ~density spiking lines (times in [0, T))."""
+    t = rng.integers(0, t_steps, size=(bsz, n))
+    silent = rng.random((bsz, n)) >= density
+    return np.where(silent, int(coding.NO_SPIKE), t).astype(np.int32)
+
+
+def build_stack(depth: int, n_col: int, rf: int, q: int, t_steps: int,
+                backend: str) -> network.TNNNetwork:
+    """Depth-layer constant-width stack (rf == q keeps C constant)."""
+    layers = [layer.TNNLayer(
+        n_columns=n_col, rf_size=rf, n_neurons=q, threshold=5,
+        t_steps=t_steps, dendrite="catwalk", k=2, backend=backend)]
+    for _ in range(depth - 1):
+        prev = layers[-1]
+        layers.append(layer.TNNLayer(
+            n_columns=prev.n_outputs // rf, rf_size=rf, n_neurons=q,
+            threshold=4, t_steps=t_steps, dendrite="catwalk", k=2,
+            backend=backend))
+    return network.make_network(layers)
+
+
+def main(smoke: bool = False) -> None:
+    smoke = smoke or smoke_mode()
+    reset_results()
+    if smoke:
+        depths, mbs, n_col, rf, q, t_steps, bsz = (1, 2), (2, 4), 4, 4, 4, 12, 8
+        iters, backends = 3, ("scan",)
+    else:
+        depths, mbs, n_col, rf, q, t_steps, bsz = \
+            (1, 2, 3, 4), (4, 8, 16, 32), 16, 16, 16, 64, 128
+        iters, backends = 10, ("scan", "closed_form")
+    density = 0.25
+    rng = np.random.default_rng(0)
+    note_meta(batch=bsz, n_columns=n_col, rf_size=rf, n_neurons=q,
+              t_steps=t_steps, depths=list(depths), microbatches=list(mbs),
+              backends=list(backends), density=density)
+
+    for backend in backends:
+        for depth in depths:
+            net = build_stack(depth, n_col, rf, q, t_steps, backend)
+            params = network.init_network(jax.random.PRNGKey(0), net)
+            v = jnp.asarray(sparse_volleys(rng, bsz, net.n_inputs, t_steps,
+                                           density))
+            fwd = jax.jit(
+                lambda p, x, n=net: network.network_forward(p, x, n)[0])
+            ref = np.asarray(fwd(params, v))
+            base_us = time_fn(fwd, params, v, iters=iters)
+            emit(f"pipeline/{backend}_d{depth}_barrier", base_us,
+                 f"{bsz * 1e6 / base_us:.0f}_volleys_per_s",
+                 depth=depth, microbatches=1, batch=bsz, backend=backend,
+                 density=spike_density(np.asarray(v)))
+            for m in mbs:
+                if m > bsz:
+                    continue
+                pf = jax.jit(
+                    lambda p, x, n=net, m=m:
+                    network.network_forward_pipelined(p, x, n, m)[0])
+                got = np.asarray(pf(params, v))
+                if not np.array_equal(got, ref):   # schedule must be inert
+                    raise AssertionError(
+                        f"pipelined output diverges at {backend} "
+                        f"depth={depth} M={m}")
+                us = time_fn(pf, params, v, iters=iters)
+                emit(f"pipeline/{backend}_d{depth}_M{m}", us,
+                     f"{base_us / us:.2f}x_vs_barrier",
+                     depth=depth, microbatches=m, batch=bsz,
+                     backend=backend, speedup_vs_barrier=base_us / us)
+    write_json("pipeline", smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI plumbing validation")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

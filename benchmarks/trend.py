@@ -6,13 +6,19 @@ current run's in another, and this script matches rows by ``name`` within
 each bench file and reports the per-row wall-time delta as a markdown
 table (suitable for ``$GITHUB_STEP_SUMMARY``).
 
-Exit code is always 0 unless ``--strict`` is given (then regressions
-beyond the threshold fail) — smoke-mode CI timings on shared runners are
-too noisy for a hard gate until several runs have accumulated; rows from a
-smoke artifact are marked as such and held to no gate at all.
+Two gate levels (ISSUE 5 graduated the job from warn-only now that
+artifacts have accumulated across runs):
+
+* ``--threshold`` (default 0.25) marks a row as a regression/improvement
+  in the table — reporting only.
+* ``--fail-threshold`` arms the HARD gate: exit 1 when any non-smoke row
+  slows down by more than this fraction; slowdowns at or below it (and
+  every smoke row — tiny-size timings on shared runners are noise, not
+  signal) only warn. ``--strict`` remains as the legacy spelling of
+  ``--fail-threshold <threshold>``.
 
 Run:  python benchmarks/trend.py <previous_dir> <current_dir>
-          [--threshold 0.25] [--strict]
+          [--threshold 0.25] [--fail-threshold 0.25] [--strict]
 """
 
 from __future__ import annotations
@@ -51,12 +57,12 @@ def numeric_rows(payload: dict) -> dict:
 
 
 def compare(prev: dict, cur: dict, threshold: float):
-    """Yield (bench, row, prev_us, cur_us, delta_frac, flag) tuples.
+    """Yield (bench, row, prev_us, cur_us, delta_frac, flag, smoke) tuples.
 
     ``delta_frac`` > 0 means the current run is slower. ``flag`` is
     "regression" past the threshold, "improvement" past it the other way,
     "" otherwise; smoke artifacts get "(smoke)" appended — noise, not
-    signal.
+    signal — and carry ``smoke=True`` so the hard gate can skip them.
     """
     for bench in sorted(set(prev) & set(cur)):
         p_rows, c_rows = numeric_rows(prev[bench]), numeric_rows(cur[bench])
@@ -73,7 +79,7 @@ def compare(prev: dict, cur: dict, threshold: float):
                 flag = "improvement"
             if smoke and flag:
                 flag += " (smoke)"
-            yield bench, name, p_us, c_us, delta, flag
+            yield bench, name, p_us, c_us, delta, flag, smoke
 
 
 def main(argv=None) -> int:
@@ -81,11 +87,18 @@ def main(argv=None) -> int:
     ap.add_argument("previous", help="dir with the previous run's artifacts")
     ap.add_argument("current", help="dir with the current run's artifacts")
     ap.add_argument("--threshold", type=float, default=0.25,
-                    help="fractional slowdown that counts as a regression")
+                    help="fractional slowdown that counts as a regression "
+                         "in the report table")
+    ap.add_argument("--fail-threshold", type=float, default=None,
+                    help="hard gate: exit 1 when a non-smoke row slows "
+                         "down by more than this fraction (warn at or "
+                         "below it); omit for warn-only")
     ap.add_argument("--strict", action="store_true",
-                    help="exit 1 on non-smoke regressions (future hard "
-                         "gate; default is warn-only)")
+                    help="legacy spelling of --fail-threshold <threshold>")
     args = ap.parse_args(argv)
+    fail_threshold = args.fail_threshold
+    if fail_threshold is None and args.strict:
+        fail_threshold = args.threshold
 
     prev = load_dir(args.previous)
     cur = load_dir(args.current)
@@ -104,23 +117,41 @@ def main(argv=None) -> int:
         return 0
     print("| bench | row | prev us | cur us | delta | |")
     print("|---|---|---:|---:|---:|---|")
-    regressions = 0
-    for bench, name, p_us, c_us, delta, flag in rows:
-        if flag.startswith("regression") and "smoke" not in flag:
+    regressions = failures = 0
+    for bench, name, p_us, c_us, delta, flag, smoke in rows:
+        if flag.startswith("regression") and not smoke:
             regressions += 1
+        # the hard gate is independent of the reporting threshold: a
+        # --fail-threshold below --threshold must still trip
+        if fail_threshold is not None and not smoke \
+                and delta > fail_threshold:
+            failures += 1
         mark = {"regression": "⚠️", "improvement": "✅"}.get(
             flag.split(" ")[0], "")
         print(f"| {bench} | {name} | {p_us:.1f} | {c_us:.1f} | "
               f"{delta:+.0%} | {mark} {flag} |")
+    # disappearing coverage is loud, not silent: a renamed/dropped row or
+    # bench would otherwise slip past the hard gate unseen (the gate only
+    # compares the name intersection — reviewers judge disappearances)
     missing = [b for b in prev if b not in cur]
     if missing:
         print(f"\nbenches present previously but missing now: "
               f"{', '.join(sorted(missing))}")
+    for bench in sorted(set(prev) & set(cur)):
+        gone = sorted(set(numeric_rows(prev[bench]))
+                      - set(numeric_rows(cur[bench])))
+        if gone:
+            print(f"\nrows present previously but missing now in {bench}: "
+                  f"{', '.join(gone)}")
+    if failures:
+        print(f"\nFAIL: {failures} non-smoke row(s) slowed down past the "
+              f"{fail_threshold:.0%} hard gate")
+        return 1
     if regressions:
+        gate = ("hard gate armed" if fail_threshold is not None
+                else "warn-only gate")
         print(f"\n{regressions} non-smoke regression(s) past "
-              f"{args.threshold:.0%} (warn-only gate)")
-        if args.strict:
-            return 1
+              f"{args.threshold:.0%} ({gate})")
     return 0
 
 

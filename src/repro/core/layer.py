@@ -110,6 +110,16 @@ def init_layer(key: jax.Array, cfg: TNNLayer) -> jax.Array:
         minval=0.0, maxval=float(cfg.w_max))
 
 
+def stage_init(cfg: TNNLayer, batch: int) -> jax.Array:
+    """All-``NO_SPIKE`` pipeline stage buffer ``(batch, n_inputs)``.
+
+    The inert warmup/drain carry for gamma-cycle pipelining (DESIGN.md
+    §5.4): silent lines launch no RNL ramp, so a layer fed this buffer
+    fires no neuron and emits an all-``NO_SPIKE`` volley — padding
+    propagates as padding through the whole stack."""
+    return jnp.full((batch, cfg.n_inputs), coding.NO_SPIKE, jnp.int32)
+
+
 def _gather_rf(volleys: jax.Array, cfg: TNNLayer) -> jax.Array:
     """(B, n_inputs) volleys -> (C, B, rf_size) per-column slices."""
     rf = volleys[:, cfg.rf_index()]           # (B, C, rf)

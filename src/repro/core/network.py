@@ -20,9 +20,12 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
+from repro.core import coding
 from repro.core import layer as layer_mod
+from repro.core import neuron
 from repro.sharding import specs as sharding_specs
 
 
@@ -111,24 +114,136 @@ def network_forward(params: Sequence[jax.Array], volleys: jax.Array,
     return out, tuple(winners_all)
 
 
-def measured_densities(params: Sequence[jax.Array], volleys: jax.Array,
-                       cfg: TNNNetwork):
-    """Per-layer measured input densities for one concrete batch.
+def microbatch_split(batch: int, microbatches: int) -> Tuple[int, int]:
+    """(effective M, rows per micro-batch) for a pipelined split (§5.4).
 
-    Runs the stack layer by layer and records the fraction of contributing
-    lines each layer's neuron banks see — layer 0 reflects the input
-    encoding's sparsity, deeper layers the 1-WTA thinning (at most one hot
-    line per column, so density <= 1/n_neurons there). Host diagnostic for
-    the serving demo and the ``auto`` backend policy; requires concrete
-    inputs (returns ``None`` entries under jit).
+    Clamps ``microbatches`` to [1, batch], ceil-splits the rows, then
+    recomputes the effective count (a ragged batch can need fewer
+    micro-batches than requested). The single encoding of the split —
+    :func:`network_forward_pipelined` schedules with it and the serve
+    engine's per-stage stats (``TNNEngine``) mirror it, so the two can
+    never disagree about which rows form stage i.
     """
-    x = volleys[None, :] if volleys.ndim == 1 else volleys
+    if batch <= 0:
+        return 0, 0
+    m = max(1, min(int(microbatches), batch))
+    rows = -(-batch // m)
+    return -(-batch // rows), rows
+
+
+def network_forward_pipelined(params: Sequence[jax.Array],
+                              volleys: jax.Array, cfg: TNNNetwork,
+                              microbatches: int = 2
+                              ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """One gamma cycle through the stack, software-pipelined (§5.4).
+
+    Learning and inference in a TNN are layer-local, so layer l never
+    needs anything from layer l+1 — ``network_forward``'s whole-batch
+    barrier at every layer is a scheduling choice, not a data dependency.
+    This variant splits the batch into M micro-batches and streams them:
+    at pipeline tick t, layer l computes micro-batch t - l, so all L
+    layers run concurrently on distinct micro-batches (``lax.scan`` over
+    a shifted stage buffer). Warmup/drain ticks feed all-``NO_SPIKE``
+    stage buffers (:func:`repro.core.layer.stage_init`) — silent volleys
+    fire nothing, so the padding is inert and the valid rows are sliced
+    out after the scan. Under an active mesh each stage buffer is pinned
+    by the §6.5 stage-to-shard rule (micro-batch over ``data``, output
+    lines over ``column``); without one the constraints are identity.
+
+    Bit-exact vs :func:`network_forward` for every backend and any M:
+    ``microbatches`` is clamped to [1, B], a ragged ``B % M != 0`` batch
+    is NO_SPIKE-padded to full micro-batches, and M=1 degenerates to the
+    barriered schedule (modulo the scan). Under an active mesh the tick
+    scan is fully unrolled (the tick count M + L - 1 is static): XLA's
+    while-loop carry layout propagation miscompiles a cross-layer stage
+    carry on a data-sharded mesh (jax 0.4.x — wrong *values*, not just
+    layouts), and straight-line code sidesteps the loop entirely.
+
+    Args/returns: as :func:`network_forward`, plus ``microbatches``.
+    """
+    single = volleys.ndim == 1
+    x = volleys[None, :] if single else volleys
+    x = x.astype(jnp.int32)
+    b = x.shape[0]
+    if b == 0:   # nothing to stream; match the barriered empty outputs
+        return network_forward(params, volleys, cfg)
+    n_layers = len(cfg.layers)
+    m, rows = microbatch_split(b, microbatches)
+    if m * rows > b:             # ragged tail: NO_SPIKE rows are inert
+        # jnp.pad, not a concat with a replicated block: concatenating a
+        # fresh all-NO_SPIKE array onto the data-sharded batch trips the
+        # same jax 0.4.x SPMD miscompile the unroll below dodges
+        x = jnp.pad(x, ((0, m * rows - b), (0, 0)),
+                    constant_values=int(coding.NO_SPIKE))
+    xs = x.reshape(m, rows, x.shape[-1])
+    if n_layers > 1:             # drain ticks flush the last micro-batches
+        xs = jnp.pad(xs, ((0, n_layers - 1), (0, 0), (0, 0)),
+                     constant_values=int(coding.NO_SPIKE))
+    stage0 = tuple(layer_mod.stage_init(lc, rows) for lc in cfg.layers[1:])
+    stage_axes = sharding_specs.tnn_stage_axes()
+
+    def tick(stage, x_t):
+        new_stage, wins, out = [], [], None
+        for i, (w, lc) in enumerate(zip(params, cfg.layers)):
+            inp = x_t if i == 0 else stage[i - 1]
+            out, win = layer_mod.layer_forward(w, inp, lc)
+            wins.append(win)
+            if i + 1 < n_layers:
+                nxt = out.reshape(rows, lc.n_outputs)
+                new_stage.append(sharding_specs.maybe_wsc(nxt, *stage_axes))
+        return tuple(new_stage), (out, tuple(wins))
+
+    ticks = m + n_layers - 1
+    unroll = ticks if neuron.mesh_active() else 1
+    _, (ys_out, ys_win) = jax.lax.scan(tick, stage0, xs, unroll=unroll)
+    # layer l's tick-t output belongs to micro-batch t - l: the last
+    # layer's valid outputs are ticks L-1 .. L-1+M-1, layer l's winners
+    # ticks l .. l+M-1; everything outside is warmup/drain padding.
+    out = ys_out[n_layers - 1:]
+    out = out.reshape(m * rows, *out.shape[2:])[:b]
+    winners = tuple(
+        ys_win[i][i:i + m].reshape(m * rows, -1)[:b]
+        for i in range(n_layers))
+    if single:
+        return out[0], tuple(w[0] for w in winners)
+    return out, winners
+
+
+def network_forward_with_densities(params: Sequence[jax.Array],
+                                   volleys: jax.Array, cfg: TNNNetwork):
+    """:func:`network_forward` that also reports per-layer input densities.
+
+    One pass: each layer's measured density (the fraction of contributing
+    lines its neuron banks see — layer 0 reflects the input encoding's
+    sparsity, deeper layers the 1-WTA thinning, at most one hot line per
+    column so density <= 1/n_neurons there) is recorded on the same
+    activations the forward computes, so callers that want both outputs
+    and the §3.3 policy diagnostic don't run the stack twice. Host-side:
+    densities are ``None`` under jit (``layer_input_density``).
+
+    Returns (out_times, winners, densities).
+    """
+    single = volleys.ndim == 1
+    x = volleys[None, :] if single else volleys
     densities = []
+    winners_all = []
+    out = None
     for w, lc in zip(params, cfg.layers):
         densities.append(layer_mod.layer_input_density(x, lc))
-        out, _ = layer_mod.layer_forward(w, x, lc)
+        out, winners = layer_mod.layer_forward(w, x, lc)
+        winners_all.append(winners)
         x = out.reshape(out.shape[0], lc.n_outputs)
-    return densities
+    if single:
+        return out[0], tuple(w[0] for w in winners_all), densities
+    return out, tuple(winners_all), densities
+
+
+def measured_densities(params: Sequence[jax.Array], volleys: jax.Array,
+                       cfg: TNNNetwork):
+    """Per-layer measured input densities for one concrete batch (thin
+    wrapper over :func:`network_forward_with_densities` for callers that
+    only want the diagnostic)."""
+    return network_forward_with_densities(params, volleys, cfg)[2]
 
 
 def sparse_widths(cfg: TNNNetwork, first: int) -> Tuple[int, ...]:

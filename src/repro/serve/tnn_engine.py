@@ -78,6 +78,14 @@ class TNNServeConfig:
     #: exactly the sparse case it wins on — else the closed form. All
     #: engines are bit-exact, so the policy never changes outputs.
     backend: neuron.Backend = "auto"
+    #: gamma-cycle pipeline micro-batches per step (DESIGN.md §5.4): 1 =
+    #: the barriered ``network_forward``; M > 1 streams the slot batch
+    #: through the layer stack in M micro-batches
+    #: (``network.network_forward_pipelined``) so layer l works micro-batch
+    #: t while layer l+1 works micro-batch t-1. Bit-exact for every
+    #: backend; the density/width measurements stay host-side, taken per
+    #: micro-batch (``stats()`` reports per-stage means).
+    pipeline_microbatches: int = 1
 
 
 @dataclasses.dataclass
@@ -152,7 +160,22 @@ class TNNEngine:
             self.params = tuple(jnp.asarray(p) for p in params)
             self._batch_sharding = None
         self.pool: slots.SlotPool[TNNRequest] = slots.SlotPool(scfg.n_slots)
-        self._fwd = jax.jit(lambda p, v: network.network_forward(p, v, net)[0])
+        if scfg.pipeline_microbatches < 1:
+            raise ValueError(
+                f"pipeline_microbatches must be >= 1, got {scfg.pipeline_microbatches}"
+            )
+        # effective micro-batch split — network.microbatch_split is the
+        # single encoding, shared with network_forward_pipelined, so the
+        # host-side _stage_rows (per-stage density measurement) can never
+        # disagree with the compiled pipeline schedule
+        self.n_stages, rows = network.microbatch_split(
+            scfg.n_slots, scfg.pipeline_microbatches
+        )
+        self._stage_rows = [
+            (i * rows, min((i + 1) * rows, scfg.n_slots)) for i in range(self.n_stages)
+        ]
+        self._stage_density_sums = [0.0] * self.n_stages
+        self._fwd = jax.jit(self._forward_fn(net))
         # density-less resolution = the engine self._fwd compiles to; the
         # per-step density policy swaps in a sparse engine via _fwd_for
         # (resolved inside the mesh scope so TPU+mesh never defaults to the
@@ -173,6 +196,16 @@ class TNNEngine:
         self._density_sum = 0.0
         self._backend_steps: Dict[str, int] = {}
 
+    def _forward_fn(self, net: network.TNNNetwork):
+        """Step function over a (possibly engine-pinned) network: the
+        barriered ``network_forward``, or the §5.4 pipelined schedule when
+        the engine runs with ``pipeline_microbatches > 1`` — bit-exact
+        either way, so every jit variant (``_fwd_for``) shares it."""
+        if self.n_stages > 1:
+            m = self.n_stages
+            return lambda p, v: network.network_forward_pipelined(p, v, net, m)[0]
+        return lambda p, v: network.network_forward(p, v, net)[0]
+
     def reset_stats(self) -> None:
         """Zero the throughput/latency accounting (e.g. after jit warmup);
         pending/live requests and the compiled step are untouched."""
@@ -181,6 +214,7 @@ class TNNEngine:
         self.n_volleys = 0
         self._run_s = 0.0
         self._density_sum = 0.0
+        self._stage_density_sums = [0.0] * self.n_stages
         self._backend_steps = {}
         self.pool.n_retired = 0
         self.pool.n_submitted = self.pool.n_live + self.pool.n_pending
@@ -266,7 +300,7 @@ class TNNEngine:
                     )
                 )
             pinned = network.make_network(layers)
-            self._fwd_alt[key] = jax.jit(lambda p, v: network.network_forward(p, v, pinned)[0])
+            self._fwd_alt[key] = jax.jit(self._forward_fn(pinned))
         return self._fwd_alt[key]
 
     def step(self) -> List[TNNRequest]:
@@ -283,8 +317,14 @@ class TNNEngine:
             batch[idx] = req.volleys[req.cursor]
         # measured batch density (host-side — the jit boundary can't see
         # it): NO_SPIKE-padded free slots count as silent lines, which is
-        # precisely why partially-filled batches resolve to the event path
+        # precisely why partially-filled batches resolve to the event path.
+        # Under pipelining the same measurement lands per micro-batch, so
+        # stats() can show each stage's traffic; the step-level resolution
+        # stays whole-batch (one compiled schedule serves all stages).
         density = float(np.mean(batch < self._t_steps))
+        if self.n_stages > 1:
+            for i, (lo, hi) in enumerate(self._stage_rows):
+                self._stage_density_sums[i] += float(np.mean(batch[lo:hi] < self._t_steps))
         with self._mesh_scope():
             # resolution inside the mesh scope: the auto policy must see the
             # mesh (neuron.mesh_active) so it never picks the Pallas engines
@@ -348,6 +388,10 @@ class TNNEngine:
             denom = self.n_steps * self.scfg.n_slots
             out["slot_occupancy"] = self.n_volleys / denom
             out["density_mean"] = self._density_sum / self.n_steps
+        out["pipeline_microbatches"] = float(self.n_stages)
+        if self.n_steps > 0 and self.n_stages > 1:
+            for i, total in enumerate(self._stage_density_sums):
+                out[f"density_stage{i}_mean"] = total / self.n_steps
         for engine, steps in self._backend_steps.items():
             out[f"steps_{engine}"] = float(steps)
         out.update(slots.latency_summary(self._retired))

@@ -303,3 +303,21 @@ def tnn_data_pspec(mesh: Mesh, n_columns: int, batch: int) -> P:
 def tnn_batch_pspec(mesh: Mesh, batch: int) -> P:
     """Input volley batch (B, n_inputs): batch over the DP group."""
     return batch_pspec(mesh, batch, extra_dims=1)
+
+
+def tnn_stage_axes() -> tuple:
+    """``maybe_wsc`` axis entries for a gamma-cycle pipeline stage buffer
+    ``(mb, n_lines)`` (DESIGN.md §6.5): the micro-batch over the DP group
+    and the flattened ``C_l * Q_l`` output lines over ``column`` — so a
+    stage's lines live on the column shards of the layer that produced
+    them, and the next layer's receptive-field gather reads locally."""
+    return (dp_spec_names(), TNN_COLUMN_AXIS)
+
+
+def tnn_stage_pspec(mesh: Mesh, batch: int, n_lines: int) -> P:
+    """Stage-to-shard placement for a pipeline stage buffer ``(mb,
+    n_lines)`` — the externally-placed twin of
+    :func:`tnn_stage_axes` (same rule, ``_fit`` fallback per dim)."""
+    dp, col = tnn_stage_axes()
+    return P(_fit(mesh, batch, dp_axes(mesh)),
+             _fit(mesh, n_lines, col))

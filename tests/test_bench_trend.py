@@ -1,4 +1,4 @@
-"""benchmarks/trend.py: the CI bench-trend delta summary (warn-only gate)."""
+"""benchmarks/trend.py: the CI bench-trend delta summary and hard gate."""
 
 import json
 
@@ -33,6 +33,55 @@ def test_trend_strict_fails_on_regression(tmp_path, capsys):
     assert trend.main([str(prev), str(cur), "--strict"]) == 1
 
 
+def test_trend_fail_threshold_hard_gate_fails(tmp_path, capsys):
+    """The graduated hard gate: a non-smoke row slowing down by more than
+    --fail-threshold exits 1 (the ci.yml bench-trend verdict)."""
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0), ("b", 40.0)])
+    _write(cur, "kernels", [("a", 140.0), ("b", 40.0)])   # +40% > 25%
+    rc = trend.main([str(prev), str(cur), "--fail-threshold", "0.25"])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_trend_fail_threshold_warns_below_gate(tmp_path, capsys):
+    """Slowdowns at or below --fail-threshold warn (exit 0), even when the
+    reporting threshold already flags them as regressions."""
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0)])
+    _write(cur, "kernels", [("a", 140.0)])                # +40%
+    rc = trend.main([str(prev), str(cur), "--fail-threshold", "0.5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "regression" in out and "hard gate armed" in out
+    assert "FAIL" not in out
+
+
+def test_trend_fail_threshold_below_report_threshold(tmp_path, capsys):
+    """A fail-threshold tighter than the reporting threshold still trips:
+    the gate must not be nested inside the report-flag branch."""
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0)])
+    _write(cur, "kernels", [("a", 120.0)])                # +20% < 25% report
+    rc = trend.main([str(prev), str(cur), "--fail-threshold", "0.1"])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_trend_fail_threshold_ignores_smoke_rows(tmp_path, capsys):
+    """Smoke artifacts are noise: they never trip the hard gate."""
+    prev, cur = tmp_path / "prev", tmp_path / "cur"
+    prev.mkdir(), cur.mkdir()
+    _write(prev, "kernels", [("a", 100.0)], smoke=True)
+    _write(cur, "kernels", [("a", 900.0)], smoke=True)
+    rc = trend.main([str(prev), str(cur), "--fail-threshold", "0.25"])
+    assert rc == 0
+    assert "FAIL" not in capsys.readouterr().out
+
+
 def test_trend_smoke_rows_never_gate(tmp_path, capsys):
     prev, cur = tmp_path / "prev", tmp_path / "cur"
     prev.mkdir(), cur.mkdir()
@@ -61,3 +110,6 @@ def test_trend_ignores_non_numeric_and_unmatched_rows(tmp_path, capsys):
     assert "| a |" in out          # matched numeric row is compared
     assert "| gone |" not in out   # unmatched rows don't produce entries
     assert "| weird |" not in out  # non-numeric timings are skipped
+    # ...but a disappeared row is reported, so a rename/delete cannot
+    # slip past the hard gate unseen
+    assert "missing now in kernels: gone" in out

@@ -116,6 +116,18 @@ def test_tnn_batch_pspec_over_data():
     assert SH.tnn_batch_pspec(mesh3, 8) == P(("pod", "data"), None)
 
 
+def test_tnn_stage_pspec_lines_over_column():
+    # pipeline stage buffer (mb, C_l*Q_l): micro-batch over DP, output
+    # lines over column; each dim degrades independently (DESIGN.md §6.5)
+    assert SH.tnn_stage_pspec(TNN_MESH, 4, 8) == P("data", "column")
+    assert SH.tnn_stage_pspec(TNN_MESH, 3, 8) == P(None, "column")
+    assert SH.tnn_stage_pspec(TNN_MESH, 4, 6) == P("data", None)
+    assert SH.tnn_stage_pspec(TNN_MESH, 3, 6) == P(None, None)
+    # the in-jit encoding and the placed spec derive from the same rule
+    dp, col = SH.tnn_stage_axes()
+    assert col == SH.TNN_COLUMN_AXIS and dp == SH.dp_spec_names()
+
+
 def test_cache_pspec_kv_heads():
     path = (jax.tree_util.GetAttrKey("layer_caches"),
             jax.tree_util.GetAttrKey("k"))
