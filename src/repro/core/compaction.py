@@ -76,18 +76,33 @@ def max_active(times, t_steps: int):
     return int(jnp.max(jnp.sum(mask.astype(jnp.int32), axis=-1)))
 
 
-def bucket_width(s: int, quantum: int = 8) -> int:
-    """Round a measured width up to a power-of-two multiple of ``quantum``.
+#: Vector-lane width the compacted-shape ladder aligns to at/above one
+#: lane (mirrors ``repro.kernels.common.LANE``; defined locally so core
+#: never imports the kernels package).
+LANE_WIDTH = 128
 
-    Bucketing bounds jit recompiles to O(log n) distinct compacted shapes
-    when the measured width drifts between batches (the serve engine's
-    situation).
+
+def bucket_width(s: int, quantum: int = 8, lane: int = LANE_WIDTH) -> int:
+    """Snap a measured width onto the lane-aligned bucket ladder.
+
+    Below one vector lane the ladder is the power-of-two multiples of
+    ``quantum`` (8, 16, 32, 64, 128); at or above ``lane`` it switches to
+    lane multiples (128, 256, 384, ...). Two properties fall out:
+
+      * jit variants stay few — O(log lane) small shapes plus O(n / lane)
+        large ones — when the measured width drifts between batches (the
+        serve engine's per-(engine, width) cache is keyed on this);
+      * every bucket >= ``lane`` is lane-aligned, so the ``pallas_compact``
+        tick sweep reads full vector registers with no ragged tail
+        (DESIGN.md §6.4).
     """
     s = max(int(s), 1)
+    if s > lane:
+        return -(-s // lane) * lane
     width = quantum
     while width < s:
         width *= 2
-    return width
+    return min(width, lane)
 
 
 @dataclasses.dataclass

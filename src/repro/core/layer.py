@@ -159,7 +159,10 @@ def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer
     w_int = jnp.round(weights).astype(jnp.int32)
     times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
     # under an active mesh, pin the (columns, neurons) plane: columns over
-    # "column", batch over DP (DESIGN.md §6.4; identity without a mesh)
+    # "column", batch over DP (DESIGN.md §6.4; identity without a mesh).
+    # This is also the exact layout the shard_map Pallas fast path consumes
+    # (kernels/rnl_shard mirrors these entries via specs.ambient_fit), so
+    # when fire_times_bank takes that path no resharding happens here.
     times_rf = sharding_specs.maybe_wsc(times_rf, _COL, _DP, None)
     fire = neuron.fire_times_bank(times_rf, w_int, cfg.neuron_config(),
                                   backend=cfg.backend,

@@ -51,6 +51,14 @@ class TNNNetwork:
     def n_outputs(self) -> int:
         return self.layers[-1].n_outputs
 
+    @property
+    def column_counts(self) -> Tuple[int, ...]:
+        """Per-layer column counts — the shape input to the Pallas mesh
+        capability check (:func:`repro.core.neuron.pallas_shardable`);
+        callers resolving one engine for the whole stack (the serve
+        engine) pass this to ``resolve_backend``/``effective_engine``."""
+        return tuple(lc.n_columns for lc in self.layers)
+
 
 def make_network(layers: Sequence[layer_mod.TNNLayer]) -> TNNNetwork:
     return TNNNetwork(layers=tuple(layers))

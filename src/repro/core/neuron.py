@@ -37,7 +37,7 @@ spike-compacted volleys (core/compaction.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional
+from typing import Iterable, Literal, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core import coding, compaction, unary_ops
 from repro.core.topk_prune import topk_network
 from repro.sharding import compat
+from repro.sharding import specs as sharding_specs
 
 DendriteKind = Literal["pc_conventional", "pc_compact", "sorting_pc", "catwalk"]
 
@@ -287,45 +288,90 @@ def pallas_available() -> bool:
 def mesh_active() -> bool:
     """Whether an ambient device mesh is entered (compat.set_mesh).
 
-    The Pallas engines have no validated Mosaic lowering under a sharded
-    (column-partitioned) operand layout yet, so ``fire_times_bank``
-    degrades them to the bit-exact jnp engines while a mesh is active
-    (DESIGN.md §6.4); the jnp engines are sharding-transparent and keep
-    the layout the layer constraints pin.
+    Under an active mesh engine selection runs the per-kernel capability
+    check (:func:`pallas_shardable`): Pallas engines whose column stack
+    tiles the mesh's ``column`` axis run through the shard_map wrappers
+    (:mod:`repro.kernels.rnl_shard`); the rest degrade to the bit-exact
+    jnp engines, which are sharding-transparent and keep the layout the
+    layer constraints pin (DESIGN.md §6.4).
     """
     am = compat.get_abstract_mesh()
     return am is not None and bool(am.axis_names)
 
 
-def effective_engine(engine: str) -> str:
-    """The engine :func:`fire_times_bank` will actually run for ``engine``
-    given the ambient mesh: under an active mesh the Pallas engines
-    degrade to the bit-exact jnp engine of the same sparsity class (see
-    :func:`mesh_active`); everything else passes through. Callers that
-    report per-engine stats (the serve engine) use this so observability
-    matches execution.
+def pallas_shardable(n_columns: Optional[int]) -> bool:
+    """Per-kernel mesh capability of the Pallas engines (DESIGN.md §6.4).
+
+    True when no mesh is active (plain single-device launch). Under a
+    mesh, the shard_map fast path needs a 3-D column stack whose column
+    count tiles the mesh's ``column`` axis:
+
+      * ``n_columns is None`` (a 2-D ``(B, n)`` bank, no column axis to
+        shard over) -> False;
+      * mesh without a ``column`` axis -> False (nothing to map over);
+      * otherwise ``n_columns %% column-axis-size == 0``.
+
+    When this returns False the engines degrade exactly as the pre-shard
+    replication fallback did (:func:`effective_engine`).
     """
-    if engine in ("pallas", "pallas_compact") and mesh_active():
-        return "event" if engine == "pallas_compact" else "closed_form"
-    return engine
+    if not mesh_active():
+        return True
+    if n_columns is None:
+        return False
+    am = compat.get_abstract_mesh()
+    if sharding_specs.TNN_COLUMN_AXIS not in (am.axis_names or ()):
+        return False
+    return n_columns % sharding_specs.tnn_column_size() == 0
 
 
-def resolve_backend(backend: Backend, density: Optional[float] = None) -> str:
+ColumnCounts = Union[int, Iterable[int], None]
+
+
+def effective_engine(engine: str,
+                     column_counts: ColumnCounts = None) -> str:
+    """The engine :func:`fire_times_bank` will actually run for ``engine``
+    given the ambient mesh. The Pallas engines pass through when every
+    column count in ``column_counts`` is :func:`pallas_shardable` (the
+    shard_map fast path serves them); otherwise — replication fallback, a
+    2-D bank, or an unknown shape (``column_counts=None``) — they degrade
+    to the bit-exact jnp engine of the same sparsity class, exactly the
+    pre-shard behavior. Everything else passes through unconditionally.
+
+    ``column_counts`` is one count (a single bank call), an iterable of
+    per-layer counts (the serve engine resolving for a whole network), or
+    ``None`` for "shape unknown" (conservative: degrade under a mesh).
+    Callers that report per-engine stats (the serve engine) use this so
+    observability matches execution.
+    """
+    if engine not in ("pallas", "pallas_compact") or not mesh_active():
+        return engine
+    if column_counts is not None:
+        counts = ((column_counts,) if isinstance(column_counts, int)
+                  else tuple(column_counts))
+        if counts and all(pallas_shardable(c) for c in counts):
+            return engine
+    return "event" if engine == "pallas_compact" else "closed_form"
+
+
+def resolve_backend(backend: Backend, density: Optional[float] = None,
+                    column_counts: ColumnCounts = None) -> str:
     """Resolve ``auto`` to a concrete engine; explicit names pass through.
 
     Policy (DESIGN.md §3.3 decision table): on TPU the fused Pallas kernel
-    is the fast path. Off-TPU, a *measured* input density at or below
-    :data:`DENSITY_EVENT_MAX` picks the event engine (its O(s log s)
-    breakpoint solve beats the dense O(T·n) closed form exactly when few
-    lines carry spikes); otherwise the vectorized closed form. ``density``
-    is the fraction of contributing lines (see
+    is the fast path — including inside a mesh scope, whenever the column
+    counts clear the :func:`pallas_shardable` capability check (the
+    shard_map wrappers run it per column tile). Off-TPU, a *measured*
+    input density at or below :data:`DENSITY_EVENT_MAX` picks the event
+    engine (its O(s log s) breakpoint solve beats the dense O(T·n) closed
+    form exactly when few lines carry spikes); otherwise the vectorized
+    closed form. ``density`` is the fraction of contributing lines (see
     :func:`repro.core.compaction.measured_density`) — pass ``None`` when
     unknown (e.g. under jit), which keeps the dense choice.
     """
     if backend != "auto":
         return backend
     if jax.default_backend() == "tpu" and pallas_available() \
-            and not mesh_active():
+            and effective_engine("pallas", column_counts) == "pallas":
         return "pallas"
     if density is not None and density <= DENSITY_EVENT_MAX:
         return "event"
@@ -374,7 +420,11 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
       * ``"pallas"``      — fused TPU kernel
         (:func:`repro.kernels.rnl_neuron.rnl_fire_times`), one launch per
         bank, or per column stack for 3-D inputs; tick loop early-exits at
-        the batch's last breakpoint.
+        the batch's last breakpoint. Under an active mesh, shardable
+        column stacks run one launch per column tile via the shard_map
+        wrappers (:mod:`repro.kernels.rnl_shard`, see
+        :func:`pallas_shardable`); non-shardable shapes degrade to the
+        jnp engines (:func:`effective_engine`).
       * ``"pallas_compact"`` — the same fused sweep over spike-compacted
         volleys (:func:`repro.kernels.rnl_neuron.rnl_fire_times_compact`):
         active lines relocated to a dense prefix of width ``n_active_max``
@@ -405,28 +455,31 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
       inputs.
     """
     times, weights = _bank_shapes(times, weights)
+    n_columns = times.shape[0] if times.ndim == 3 else None
     if times.ndim == 3:
         # column-stack form: pin the incoming sharded layout (columns over
         # "column", volleys over DP) so the jnp engines' broadcasts keep
         # the partition instead of all-gathering; identity without a mesh.
-        from repro.sharding import specs as sharding_specs
         col, dp, _ = sharding_specs.tnn_volley_axes()
         times = sharding_specs.maybe_wsc(times, col, dp, None)
         weights = sharding_specs.maybe_wsc(weights, col, None, None)
     k = clip_k(cfg)
     # measure density only where the policy can use it: explicit backends
     # ignore it, and when resolve_backend will pick pallas before looking
-    # (TPU with the kernel importable) skip the reduction + host sync
+    # (TPU with the kernel importable, capability check clear) skip the
+    # reduction + host sync
     density = None
-    if backend == "auto" and not (jax.default_backend() == "tpu"
-                                  and pallas_available()
-                                  and not mesh_active()):
+    if backend == "auto" and not (
+            jax.default_backend() == "tpu" and pallas_available()
+            and effective_engine("pallas", n_columns) == "pallas"):
         density = compaction.measured_density(times, cfg.t_steps)
-    # explicit Pallas under an active mesh: no validated sharded Mosaic
-    # lowering yet — degrade to the bit-exact jnp engine of the same
-    # sparsity class (DESIGN.md §6.4). "auto" never degrades here
-    # (resolve_backend skips pallas while a mesh is entered).
-    engine = effective_engine(resolve_backend(backend, density=density))
+    # Pallas under an active mesh: shardable column stacks run through the
+    # shard_map wrappers below; everything else (2-D banks, non-dividing
+    # C — the replication fallback) degrades to the bit-exact jnp engine
+    # of the same sparsity class (DESIGN.md §6.4).
+    engine = effective_engine(
+        resolve_backend(backend, density=density, column_counts=n_columns),
+        column_counts=n_columns)
 
     if engine in ("pallas", "pallas_compact"):
         # an explicit pallas request must not silently degrade — only
@@ -435,9 +488,17 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
         if times.ndim not in (2, 3):
             raise ValueError(f"{engine} backend supports (B, n) or "
                              f"(C, B, n) volleys, got {times.shape}")
+        # effective_engine only lets a Pallas engine through under a mesh
+        # when the column stack clears pallas_shardable
+        sharded = mesh_active() and times.ndim == 3
         if engine == "pallas_compact":
             comp, w_c = _compact_bank(times, weights, cfg.t_steps,
                                       n_active_max, engine)
+            if sharded:
+                from repro.kernels import rnl_shard
+                return rnl_shard.rnl_fire_times_compact_sharded(
+                    comp.times, w_c, t_steps=cfg.t_steps,
+                    threshold=cfg.threshold, k=k)
             # fold the column axis into the batch: compaction already made
             # weights per-volley, so one launch serves all columns
             ct = comp.times.reshape(-1, comp.width)
@@ -445,6 +506,11 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
             fire = rnl_neuron.rnl_fire_times_compact(
                 ct, cw, t_steps=cfg.t_steps, threshold=cfg.threshold, k=k)
             return fire.reshape(times.shape[:-1] + (weights.shape[-2],))
+        if sharded:
+            from repro.kernels import rnl_shard
+            return rnl_shard.rnl_fire_times_layer_sharded(
+                times, weights, t_steps=cfg.t_steps,
+                threshold=cfg.threshold, k=k)
         if times.ndim == 2:
             return rnl_neuron.rnl_fire_times(
                 times, weights, t_steps=cfg.t_steps,

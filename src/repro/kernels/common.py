@@ -8,7 +8,6 @@ Python for bit-accurate validation). On a real TPU backend the same
 
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
@@ -17,11 +16,22 @@ LANE = 128          # TPU vector lane width (last dim tiling quantum)
 SUBLANE = 8         # float32 sublane quantum (second-to-last dim)
 
 
-@functools.lru_cache(maxsize=None)
 def use_interpret() -> bool:
-    env = os.environ.get("REPRO_KERNEL_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
+    """Whether ``pl.pallas_call`` should run the Pallas interpreter.
+
+    Explicit override first: ``REPRO_PALLAS_INTERPRET=1`` forces the
+    interpreter (CI's shard-tests lane uses this to exercise the shard_map
+    kernel path on host devices), ``=0`` forces real compilation (e.g. to
+    verify Mosaic lowering on a TPU pod). ``REPRO_KERNEL_INTERPRET`` is
+    honored as a legacy alias. With neither set, sniff the backend: CPU
+    interprets, TPU compiles. Deliberately uncached so tests can flip the
+    env between subprocess-free calls (each jit specialization bakes the
+    value it saw at trace time).
+    """
+    for var in ("REPRO_PALLAS_INTERPRET", "REPRO_KERNEL_INTERPRET"):
+        env = os.environ.get(var)
+        if env is not None:
+            return env not in ("0", "false", "False")
     return jax.default_backend() == "cpu"
 
 

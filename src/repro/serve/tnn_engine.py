@@ -23,7 +23,9 @@ lines per receptive field, buckets it (``compaction.bucket_width``), and
 compiles the stack with static per-layer compaction widths
 (``network.sparse_widths``: measured bucket for layer 0, the 1-WTA
 structural bound for deeper layers) — so the jitted solve sorts ``2s``
-breakpoints, not ``2n``, and recompiles are bounded to O(log n) buckets.
+breakpoints, not ``2n``. The lane-aligned bucket ladder keeps distinct
+widths few, and the per-(engine, width) variant cache is a bounded LRU
+(``TNNServeConfig.max_jit_variants``; evictions surface in ``stats()``).
 All engines are bit-exact, so the policy is invisible in the outputs;
 ``stats()`` reports the mean measured density and per-engine step counts.
 
@@ -45,6 +47,7 @@ Front doors:
 from __future__ import annotations
 
 import asyncio
+import collections
 import contextlib
 import dataclasses
 import time
@@ -86,6 +89,15 @@ class TNNServeConfig:
     #: backend; the density/width measurements stay host-side, taken per
     #: micro-batch (``stats()`` reports per-stage means).
     pipeline_microbatches: int = 1
+    #: LRU cap on the lazily-compiled per-(engine, width) jit variants
+    #: (``_fwd_for``). The lane-aligned ``compaction.bucket_width`` ladder
+    #: already bounds distinct widths, but a long-lived service crossing
+    #: many (engine, bucket) pairs would still accumulate compiled
+    #: executables without bound — beyond this many variants the least
+    #: recently used is dropped (and recompiled if needed again;
+    #: ``stats()['jit_evictions']`` counts drops). The default compiled
+    #: step (``_fwd``) is pinned and never counts against the cap.
+    max_jit_variants: int = 8
 
 
 @dataclasses.dataclass
@@ -176,13 +188,28 @@ class TNNEngine:
         ]
         self._stage_density_sums = [0.0] * self.n_stages
         self._fwd = jax.jit(self._forward_fn(net))
+        #: per-layer column counts — the shape input to the Pallas mesh
+        #: capability check (neuron.pallas_shardable); resolution passes
+        #: it so a mesh + dividing columns keeps the shard_map fast path
+        self._column_counts = net.column_counts
         # density-less resolution = the engine self._fwd compiles to; the
         # per-step density policy swaps in a sparse engine via _fwd_for
-        # (resolved inside the mesh scope so TPU+mesh never defaults to the
-        # Pallas engines the sharded layout can't run yet)
+        # (resolved inside the mesh scope with the network's column counts,
+        # so the Pallas engines survive exactly when every layer clears the
+        # per-kernel capability check — DESIGN.md §6.4)
         with self._mesh_scope():
-            self._default_engine = neuron.effective_engine(neuron.resolve_backend(scfg.backend))
-        self._fwd_alt: Dict[tuple, object] = {}
+            self._default_engine = neuron.effective_engine(
+                neuron.resolve_backend(
+                    scfg.backend, column_counts=self._column_counts),
+                column_counts=self._column_counts)
+        if scfg.max_jit_variants < 1:
+            raise ValueError(
+                f"max_jit_variants must be >= 1, got {scfg.max_jit_variants}")
+        # LRU over the lazily-compiled (engine, width) variants; the
+        # default self._fwd lives outside it and is never evicted
+        self._fwd_alt: "collections.OrderedDict[tuple, object]" = \
+            collections.OrderedDict()
+        self._jit_evictions = 0
         self._t_steps = net.layers[0].t_steps
         # layer-0 receptive-field line ids, host-side: the per-step sparse
         # width is measured on the gathered view the neuron banks will see
@@ -277,31 +304,40 @@ class TNNEngine:
         backends are respected). Sparse engines additionally pin static
         compaction widths (``network.sparse_widths`` seeded with the
         measured+bucketed ``first_width``), so the jitted stack runs the
-        compacted solve; distinct buckets get distinct compiles, bounded
-        to O(log n) entries by the power-of-two bucketing.
+        compacted solve; distinct buckets get distinct compiles, few by
+        construction (the lane-aligned ``compaction.bucket_width`` ladder)
+        and capped overall: the variants live in an LRU of
+        ``scfg.max_jit_variants`` entries — an over-cap compile drops the
+        least recently used executable (``stats()['jit_evictions']``).
         """
         if engine == self._default_engine and first_width is None:
             return self._fwd
         key = (engine, first_width)
-        if key not in self._fwd_alt:
-            widths = (
-                network.sparse_widths(self.net, first_width)
-                if first_width is not None
-                else (None,) * len(self.net.layers)
-            )
-            layers = []
-            for lc, width in zip(self.net.layers, widths):
-                eff = engine if lc.backend == "auto" else lc.backend
-                layers.append(
-                    dataclasses.replace(
-                        lc,
-                        backend=eff,
-                        n_active_max=width if eff in SPARSE_ENGINES else lc.n_active_max,
-                    )
+        if key in self._fwd_alt:
+            self._fwd_alt.move_to_end(key)
+            return self._fwd_alt[key]
+        widths = (
+            network.sparse_widths(self.net, first_width)
+            if first_width is not None
+            else (None,) * len(self.net.layers)
+        )
+        layers = []
+        for lc, width in zip(self.net.layers, widths):
+            eff = engine if lc.backend == "auto" else lc.backend
+            layers.append(
+                dataclasses.replace(
+                    lc,
+                    backend=eff,
+                    n_active_max=width if eff in SPARSE_ENGINES else lc.n_active_max,
                 )
-            pinned = network.make_network(layers)
-            self._fwd_alt[key] = jax.jit(self._forward_fn(pinned))
-        return self._fwd_alt[key]
+            )
+        pinned = network.make_network(layers)
+        fwd = jax.jit(self._forward_fn(pinned))
+        self._fwd_alt[key] = fwd
+        while len(self._fwd_alt) > self.scfg.max_jit_variants:
+            self._fwd_alt.popitem(last=False)
+            self._jit_evictions += 1
+        return fwd
 
     def step(self) -> List[TNNRequest]:
         """One gamma cycle for every live slot; returns requests retired
@@ -326,14 +362,18 @@ class TNNEngine:
             for i, (lo, hi) in enumerate(self._stage_rows):
                 self._stage_density_sums[i] += float(np.mean(batch[lo:hi] < self._t_steps))
         with self._mesh_scope():
-            # resolution inside the mesh scope: the auto policy must see the
-            # mesh (neuron.mesh_active) so it never picks the Pallas engines
-            # while the operands are column/data-sharded; effective_engine
-            # maps an explicit Pallas request to the engine that will
-            # actually run, so stats/jit-variants record the truth
+            # resolution inside the mesh scope with the network's column
+            # counts: the auto policy sees the mesh AND the per-kernel
+            # capability (neuron.pallas_shardable), so the Pallas engines
+            # survive when every layer's columns tile the mesh and degrade
+            # only in the replication-fallback case; effective_engine maps
+            # the request to the engine that will actually run, so
+            # stats/jit-variants record the truth
             engine = neuron.effective_engine(
-                neuron.resolve_backend(self.scfg.backend, density=density)
-            )
+                neuron.resolve_backend(
+                    self.scfg.backend, density=density,
+                    column_counts=self._column_counts),
+                column_counts=self._column_counts)
             self._density_sum += density
             self._backend_steps[engine] = self._backend_steps.get(engine, 0) + 1
             # sparse engines compile against a static compaction width
@@ -394,6 +434,10 @@ class TNNEngine:
                 out[f"density_stage{i}_mean"] = total / self.n_steps
         for engine, steps in self._backend_steps.items():
             out[f"steps_{engine}"] = float(steps)
+        # compiled-variant accounting: live LRU entries + total drops (the
+        # default compiled step is pinned outside the cache)
+        out["jit_variants"] = float(len(self._fwd_alt))
+        out["jit_evictions"] = float(self._jit_evictions)
         out.update(slots.latency_summary(self._retired))
         return out
 

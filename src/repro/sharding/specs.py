@@ -197,29 +197,37 @@ def serve_shardings(state_shape, mesh: Mesh):
 
 
 # ------------------------------------------------- in-model constraints
+def ambient_fit(dim: int, entry: Axis) -> Axis:
+    """Resolve one axis entry against the AMBIENT mesh (``compat.set_mesh``
+    scope): the subset of ``entry``'s axes the mesh actually has, when
+    their combined size divides ``dim`` — else None (replication). This is
+    the single per-dim rule shared by the in-jit constraints
+    (:func:`maybe_wsc`) and the shard_map fast path
+    (:mod:`repro.kernels.rnl_shard`), so the two can never disagree about
+    a tensor's layout."""
+    am = compat.get_abstract_mesh()
+    if am is None or not am.axis_names or entry is None:
+        return None
+    names = set(am.axis_names)
+    entry_t = entry if isinstance(entry, tuple) else (entry,)
+    avail = tuple(a for a in entry_t if a in names)
+    if not avail:
+        return None
+    size = int(np.prod([am.shape[a] for a in avail]))
+    if dim % size:
+        return None
+    return avail if len(avail) > 1 else avail[0]
+
+
 def maybe_wsc(x, *spec):
     """with_sharding_constraint that degrades to identity when the named
     axes are absent (CPU unit tests, single-device benches). ``spec``
     entries are axis names, tuples of axis names, or None; axes that do
-    not divide the corresponding dim are dropped."""
+    not divide the corresponding dim are dropped (:func:`ambient_fit`)."""
     am = compat.get_abstract_mesh()
     if am is None or not am.axis_names:
         return x
-    names = set(am.axis_names)
-
-    def ok(entry, dim):
-        if entry is None:
-            return None
-        entry_t = entry if isinstance(entry, tuple) else (entry,)
-        avail = tuple(a for a in entry_t if a in names)
-        if not avail:
-            return None
-        size = int(np.prod([am.shape[a] for a in avail]))
-        if dim % size:
-            return None
-        return avail if len(avail) > 1 else avail[0]
-
-    resolved = P(*(ok(e, d) for e, d in zip(spec, x.shape)))
+    resolved = P(*(ambient_fit(d, e) for e, d in zip(x.shape, spec)))
     return jax.lax.with_sharding_constraint(x, resolved)
 
 
@@ -249,6 +257,17 @@ def dp_spec_names() -> tuple:
 
 #: mesh axis carrying the (columns, neurons) plane
 TNN_COLUMN_AXIS = "column"
+
+
+def tnn_column_size() -> int:
+    """Size of the ambient mesh's ``column`` axis (1 when no mesh is
+    active or the mesh has no such axis). The divisor a column count must
+    divide for the shard_map Pallas fast path to tile it
+    (:func:`repro.core.neuron.pallas_shardable`)."""
+    am = compat.get_abstract_mesh()
+    if am is None or TNN_COLUMN_AXIS not in (am.axis_names or ()):
+        return 1
+    return int(am.shape[TNN_COLUMN_AXIS])
 
 
 def tnn_mesh(n_column: int | None = None, n_data: int = 1, *,

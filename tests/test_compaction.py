@@ -93,6 +93,27 @@ def test_bucket_width_powers():
     assert compaction.bucket_width(100) == 128
 
 
+def test_bucket_width_lane_aligned_ladder():
+    """At/above one vector lane the ladder snaps to lane multiples
+    (128, 256, 384, ...) so compacted pallas launches read full registers;
+    below it, power-of-two quantum multiples (8..128)."""
+    lane = compaction.LANE_WIDTH
+    assert lane == 128
+    # boundary triplet around the lane (ladder-1 / ladder / ladder+1)
+    assert compaction.bucket_width(lane - 1) == lane
+    assert compaction.bucket_width(lane) == lane
+    assert compaction.bucket_width(lane + 1) == 2 * lane
+    # above one lane: ceil to lane multiples, never power-of-two blowup
+    assert compaction.bucket_width(2 * lane) == 2 * lane
+    assert compaction.bucket_width(2 * lane + 1) == 3 * lane
+    assert compaction.bucket_width(300) == 384
+    # every emitted bucket >= lane is lane-aligned; smaller ones divide it
+    for s in range(1, 5 * lane):
+        b = compaction.bucket_width(s)
+        assert b >= s
+        assert (b % lane == 0) if b >= lane else (lane % b == 0)
+
+
 def test_measured_density():
     times = jnp.array([[0, 5, NO_SPIKE, NO_SPIKE]], jnp.int32)
     assert compaction.measured_density(times) == pytest.approx(0.5)

@@ -267,6 +267,42 @@ def test_sparse_engine_compiles_compacted_stack():
     assert widths[1] == 2
 
 
+def test_jit_variant_cache_is_bounded_lru():
+    """The per-(engine, width) variant cache is an LRU capped at
+    ``max_jit_variants``: over-cap compiles evict the least recently used
+    executable, hits refresh recency, evictions surface in stats(), and
+    a re-requested evicted variant recompiles and still serves bit-exact."""
+    net = _small_net()
+    params = _params(net)
+    eng = tnn_engine.TNNEngine(
+        params, net,
+        tnn_engine.TNNServeConfig(n_slots=2, max_jit_variants=2))
+    # three distinct variants through a cap of 2
+    eng._fwd_for("event", 8)
+    eng._fwd_for("event", 16)
+    eng._fwd_for("scan", None)                 # evicts ("event", 8)
+    st = eng.stats()
+    assert st["jit_variants"] == 2.0
+    assert st["jit_evictions"] == 1.0
+    assert ("event", 8) not in eng._fwd_alt
+    # a hit refreshes recency: ("event", 16) survives the next eviction
+    eng._fwd_for("event", 16)
+    eng._fwd_for("event", 32)                  # evicts ("scan", None)
+    assert set(eng._fwd_alt) == {("event", 16), ("event", 32)}
+    assert eng.stats()["jit_evictions"] == 2.0
+    # the default compiled step is pinned outside the LRU
+    assert eng._fwd_for(eng._default_engine) is eng._fwd
+    # an evicted variant recompiles on demand and stays bit-exact
+    streams = _streams(net, 3, seed=5)
+    for stream, result in zip(streams, eng.serve(streams)):
+        np.testing.assert_array_equal(
+            tnn_engine.reference_outputs(params, net, stream), result)
+    with pytest.raises(ValueError):
+        tnn_engine.TNNEngine(
+            params, net,
+            tnn_engine.TNNServeConfig(n_slots=2, max_jit_variants=0))
+
+
 def test_sparse_widths_structural_bound():
     l1 = layer.TNNLayer(n_columns=4, rf_size=4, n_neurons=4, threshold=5,
                         t_steps=16)

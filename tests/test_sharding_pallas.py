@@ -1,0 +1,261 @@
+"""Sharded Pallas fast path (DESIGN.md §6.4): shard_map-wrapped
+``pallas`` / ``pallas_compact`` vs the jnp engines on the 2x4 host mesh.
+
+Property-style equivalence suite for kernels/rnl_shard + the per-kernel
+capability model in core/neuron: random sparse draws, all-silent and
+fully-dense batches, the ragged C=5 replication fallback, lane-bucket
+boundary widths, and the §5.4 pipelined composition — all bit-exact
+against single-device ``scan`` / ``event`` references.
+
+Same subprocess isolation contract as tests/test_sharding_tnn.py (the
+main pytest process must keep seeing one device); additionally each
+subprocess forces ``REPRO_PALLAS_INTERPRET=1`` so the Pallas interpreter
+is exercised *explicitly* through the override (not backend sniffing) —
+the same lane CI's shard-tests job runs.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from repro.kernels import common
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+#: shared preamble — mirrors tests/test_sharding_tnn.py: a 2-layer
+#: network with mesh-dividing columns (8 -> 4 on the 4-way column axis),
+#: a non-dividing C=5 net (replication fallback), and the (data=2,
+#: column=4) host mesh.
+SETUP = """
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.core import coding, compaction, layer, network, neuron
+    from repro.sharding import compat
+    from repro.sharding import specs as SH
+
+    assert jax.device_count() == 8, jax.devices()
+    NS = int(coding.NO_SPIKE)
+
+    def sparse_volleys(rng, bsz, n, t_max=20, t_steps=12):
+        t = rng.integers(0, t_max, size=(bsz, n))
+        return np.where(t >= t_steps, NS, t).astype(np.int32)
+
+    l1 = layer.TNNLayer(n_columns=8, rf_size=4, n_neurons=3, threshold=5,
+                        t_steps=12, dendrite="catwalk", k=2)
+    l2 = layer.TNNLayer(n_columns=4, rf_size=6, n_neurons=4, threshold=4,
+                        t_steps=12, dendrite="catwalk", k=2)
+    net = network.make_network([l1, l2])
+    odd = network.make_network([dataclasses.replace(l1, n_columns=5)])
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    podd = network.init_network(jax.random.PRNGKey(1), odd)
+    rng = np.random.default_rng(0)
+    v = sparse_volleys(rng, 8, net.n_inputs)
+    vodd = sparse_volleys(rng, 8, odd.n_inputs)
+    mesh = SH.tnn_mesh(4, 2)                       # (data=2, column=4)
+"""
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["REPRO_PALLAS_INTERPRET"] = "1"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(SETUP) + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_use_interpret_explicit_override(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=0/1 beats backend sniffing (and the legacy
+    REPRO_KERNEL_INTERPRET alias still works) — no subprocess needed now
+    that the selector is uncached."""
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
+    assert common.use_interpret() == (common.jax.default_backend() == "cpu")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert common.use_interpret() is False      # force-compile, even on CPU
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert common.use_interpret() is True
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
+    assert common.use_interpret() is False      # legacy alias honored
+    # the new name wins when both are set
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "true")
+    assert common.use_interpret() is True
+
+
+def test_sharded_pallas_network_bit_exact_property():
+    """network_forward with pallas/pallas_compact layers on the (2, 4)
+    mesh == the single-device scan reference, over random sparse draws
+    plus the all-silent and fully-dense edges; the ragged C=5 net takes
+    the replication fallback and must agree too."""
+    print(_run("""
+        for backend in ("pallas", "pallas_compact"):
+            for cfg0, ps in ((net, params), (odd, podd)):
+                bnet = network.make_network(
+                    [dataclasses.replace(lc, backend=backend)
+                     for lc in cfg0.layers])
+                draws = [sparse_volleys(np.random.default_rng(s), 8,
+                                        cfg0.n_inputs) for s in range(3)]
+                draws.append(np.full((8, cfg0.n_inputs), NS, np.int32))
+                draws.append(np.asarray(
+                    np.random.default_rng(7).integers(
+                        0, 12, size=(8, cfg0.n_inputs)), np.int32))
+                snet = network.make_network(
+                    [dataclasses.replace(lc, backend="scan")
+                     for lc in cfg0.layers])
+                sp = jax.device_put(ps, network.param_shardings(bnet, mesh))
+                for volleys in draws:
+                    ref, ref_win = network.network_forward(ps, volleys,
+                                                           snet)
+                    ref = np.asarray(ref)
+                    with compat.set_mesh(mesh):
+                        vs = jax.device_put(
+                            volleys, network.data_sharding(bnet, mesh,
+                                                           volleys.shape[0]))
+                        out, win = network.network_forward(sp, vs, bnet)
+                    np.testing.assert_array_equal(np.asarray(out), ref)
+                    for w_ref, w_sh in zip(ref_win, win):
+                        np.testing.assert_array_equal(np.asarray(w_sh),
+                                                      np.asarray(w_ref))
+        print('SHARDED_PALLAS_FWD_BIT_EXACT_OK')
+    """))
+
+
+def test_sharded_kernel_wrappers_and_capability_errors():
+    """Direct kernels/rnl_shard coverage: bit-exact vs the unsharded
+    kernels on a dividing stack, loud ValueError outside a mesh and on a
+    non-dividing column count (the shapes neuron.pallas_shardable gates
+    out before dispatch)."""
+    print(_run("""
+        from repro.kernels import rnl_neuron, rnl_shard
+        cfgn = l1.neuron_config()
+        times_rf = jnp.swapaxes(jnp.asarray(v)[:, l1.rf_index()], 0, 1)
+        w = jnp.round(params[0]).astype(jnp.int32)
+        ref = np.asarray(rnl_neuron.rnl_fire_times_layer(
+            times_rf, w, t_steps=12, threshold=5, k=2))
+        with compat.set_mesh(mesh):
+            got = rnl_shard.rnl_fire_times_layer_sharded(
+                times_rf, w, t_steps=12, threshold=5, k=2)
+            np.testing.assert_array_equal(np.asarray(got), ref)
+            comp = compaction.compact_volleys(times_rf, 12)
+            w_c = compaction.gather_weights(w, comp.line_index)
+            got_c = rnl_shard.rnl_fire_times_compact_sharded(
+                comp.times, w_c, t_steps=12, threshold=5, k=2)
+            np.testing.assert_array_equal(np.asarray(got_c), ref)
+            try:                                   # C=5 does not divide 4
+                rnl_shard.rnl_fire_times_layer_sharded(
+                    times_rf[:5], w[:5], t_steps=12, threshold=5, k=2)
+            except ValueError:
+                pass
+            else:
+                raise AssertionError('expected ValueError for C=5')
+        try:                                       # no mesh entered
+            rnl_shard.rnl_fire_times_layer_sharded(
+                times_rf, w, t_steps=12, threshold=5, k=2)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError('expected ValueError without a mesh')
+        print('SHARD_WRAPPER_OK')
+    """))
+
+
+def test_auto_resolves_to_pallas_under_mesh():
+    """Acceptance criterion: under the 2x4 mesh with dividing C and a TPU
+    backend, ``resolve_backend("auto", ...)`` resolves to a Pallas engine
+    and the auto-dispatched bank output is bit-exact vs single-device
+    scan (interpret mode stands in for Mosaic on the host)."""
+    print(_run("""
+        cfgn = l1.neuron_config()
+        times_rf = jnp.swapaxes(jnp.asarray(v)[:, l1.rf_index()], 0, 1)
+        w = jnp.round(params[0]).astype(jnp.int32)
+        ref = np.asarray(neuron.fire_times_bank(times_rf, w, cfgn,
+                                                backend='scan'))
+        with compat.set_mesh(mesh):
+            jb, jax.default_backend = jax.default_backend, lambda: 'tpu'
+            try:
+                assert neuron.resolve_backend(
+                    'auto', column_counts=8) == 'pallas'
+                assert neuron.resolve_backend(
+                    'auto', column_counts=(8, 4)) == 'pallas'
+                got = neuron.fire_times_bank(times_rf, w, cfgn,
+                                             backend='auto')
+            finally:
+                jax.default_backend = jb
+            np.testing.assert_array_equal(np.asarray(got), ref)
+        print('AUTO_PALLAS_UNDER_MESH_OK')
+    """))
+
+
+def test_lane_bucket_boundary_widths():
+    """pallas_compact at compacted widths straddling the bucket ladder's
+    lane boundary (s = 127 / 128 / 129 -> buckets 128 / 128 / 256) stays
+    bit-exact vs the event engine through the sharded dispatch."""
+    print(_run("""
+        lane = compaction.LANE_WIDTH
+        big = layer.TNNLayer(n_columns=8, rf_size=160, n_neurons=2,
+                             threshold=40, t_steps=16, dendrite="catwalk",
+                             k=4)
+        cfgn = big.neuron_config()
+        wkey = jax.random.PRNGKey(3)
+        w = jax.random.randint(wkey, (8, 2, 160), 0, 8, jnp.int32)
+        rng = np.random.default_rng(9)
+        for s, bucket in ((lane - 1, lane), (lane, lane),
+                          (lane + 1, 2 * lane)):
+            assert compaction.bucket_width(s) == bucket
+            t = np.full((8, 4, 160), NS, np.int32)
+            for c in range(8):
+                for b in range(4):
+                    hot = rng.choice(160, size=s, replace=False)
+                    t[c, b, hot] = rng.integers(0, 16, size=s)
+            assert compaction.max_active(t, 16) == s
+            ref = np.asarray(neuron.fire_times_bank(
+                jnp.asarray(t), w, cfgn, backend='event'))
+            with compat.set_mesh(mesh):
+                got = neuron.fire_times_bank(
+                    jnp.asarray(t), w, cfgn, backend='pallas_compact',
+                    n_active_max=bucket)
+            np.testing.assert_array_equal(np.asarray(got), ref)
+        print('LANE_BUCKET_BOUNDARY_OK')
+    """))
+
+
+def test_sharded_pipelined_pallas_bit_exact():
+    """network_forward_pipelined composes with the shard_map Pallas path:
+    the §5.4 schedule over pallas (and width-pinned pallas_compact)
+    layers on the (2, 4) mesh matches the single-device barriered scan
+    reference for ragged and degenerate micro-batch splits."""
+    print(_run("""
+        ref, ref_win = network.network_forward(params, v, net)
+        ref = np.asarray(ref)
+        widths = network.sparse_widths(
+            net, compaction.bucket_width(
+                compaction.max_active(v[:, np.asarray(l1.rf_index())],
+                                      l1.t_steps)))
+        variants = [
+            [dataclasses.replace(lc, backend="pallas")
+             for lc in net.layers],
+            [dataclasses.replace(lc, backend="pallas_compact",
+                                 n_active_max=wd)
+             for lc, wd in zip(net.layers, widths)],
+        ]
+        for layers in variants:
+            bnet = network.make_network(layers)
+            sp = jax.device_put(params, network.param_shardings(bnet, mesh))
+            for m in (1, 3, 8):
+                fwd = jax.jit(lambda p, x, n=bnet, m=m:
+                              network.network_forward_pipelined(p, x, n, m))
+                with compat.set_mesh(mesh):
+                    vs = jax.device_put(
+                        v, network.data_sharding(bnet, mesh, v.shape[0]))
+                    out, win = fwd(sp, vs)
+                np.testing.assert_array_equal(np.asarray(out), ref)
+                for w_sh, w_ref in zip(win, ref_win):
+                    np.testing.assert_array_equal(np.asarray(w_sh),
+                                                  np.asarray(w_ref))
+        print('SHARDED_PIPELINED_PALLAS_OK')
+    """))

@@ -134,10 +134,13 @@ def test_sharded_engine_serve_bit_exact():
     """))
 
 
-def test_pallas_backends_degrade_under_mesh():
-    """Explicit pallas/pallas_compact requests under an active mesh run the
-    bit-exact jnp engines (no sharded Mosaic lowering yet); auto never
-    resolves to pallas while a mesh is entered."""
+def test_pallas_mesh_capability_model():
+    """Per-kernel mesh capability (DESIGN.md §6.4): under an active mesh
+    the Pallas engines survive exactly when the column stack tiles the
+    ``column`` axis (shard_map fast path, kernels/rnl_shard); 2-D banks,
+    unknown shapes, and non-dividing C keep the replication-era
+    degradation to the bit-exact jnp engines — and serve stats() records
+    whichever engine actually ran."""
     print(_run("""
         cfgn = l1.neuron_config()
         times_rf = jnp.swapaxes(jnp.asarray(v)[:, l1.rf_index()], 0, 1)
@@ -146,26 +149,60 @@ def test_pallas_backends_degrade_under_mesh():
                                                 backend='closed_form'))
         with compat.set_mesh(mesh):
             assert neuron.mesh_active()
+            # capability: C=8 tiles the 4-way column axis; C=5 and 2-D
+            # banks (no column axis) do not
+            assert neuron.pallas_shardable(8)
+            assert not neuron.pallas_shardable(5)
+            assert not neuron.pallas_shardable(None)
+            assert neuron.effective_engine('pallas', 8) == 'pallas'
+            assert neuron.effective_engine('pallas_compact', (8, 4)) == \\
+                'pallas_compact'
+            # unknown / non-dividing shapes keep the old degradation
+            assert neuron.effective_engine('pallas') == 'closed_form'
+            assert neuron.effective_engine('pallas', 5) == 'closed_form'
+            assert neuron.effective_engine('pallas_compact', 5) == 'event'
+            # every engine stays bit-exact through the dispatch
             for backend in ('pallas', 'pallas_compact', 'auto'):
                 got = neuron.fire_times_bank(times_rf, w, cfgn,
                                              backend=backend)
                 np.testing.assert_array_equal(np.asarray(got), ref)
-            assert neuron.resolve_backend('auto') != 'pallas'
-            assert neuron.effective_engine('pallas') == 'closed_form'
-            assert neuron.effective_engine('pallas_compact') == 'event'
+            # auto -> pallas needs a TPU backend AND the capability
+            assert neuron.resolve_backend('auto', column_counts=8) != \\
+                'pallas'  # CPU here
+            jb, jax.default_backend = jax.default_backend, lambda: 'tpu'
+            try:
+                assert neuron.resolve_backend(
+                    'auto', column_counts=8) == 'pallas'
+                assert neuron.resolve_backend(
+                    'auto', column_counts=5, density=0.1) == 'event'
+            finally:
+                jax.default_backend = jb
         assert not neuron.mesh_active()
         assert neuron.effective_engine('pallas') == 'pallas'
-        # the serve engine's per-engine stats report the degraded engine,
-        # not the requested one
         from repro.serve import tnn_engine
+        # dividing columns (8, 4): the requested engine really runs and
+        # stats() records it — no stale degradation row
         eng = tnn_engine.TNNEngine(
             params, net,
             tnn_engine.TNNServeConfig(n_slots=2, backend='pallas'),
             mesh=mesh)
-        eng.serve([v[:2]])
+        for s, r in zip([v[:2]], eng.serve([v[:2]])):
+            np.testing.assert_array_equal(
+                tnn_engine.reference_outputs(params, net, s), r)
         st = eng.stats()
-        assert 'steps_pallas' not in st and st['steps_closed_form'] > 0, st
-        print('PALLAS_MESH_FALLBACK_OK')
+        assert st['steps_pallas'] > 0 and 'steps_closed_form' not in st, st
+        # non-dividing C=5: replication fallback keeps the degradation row
+        engo = tnn_engine.TNNEngine(
+            podd, odd,
+            tnn_engine.TNNServeConfig(n_slots=2, backend='pallas'),
+            mesh=mesh)
+        for s, r in zip([vodd[:2]], engo.serve([vodd[:2]])):
+            np.testing.assert_array_equal(
+                tnn_engine.reference_outputs(podd, odd, s), r)
+        sto = engo.stats()
+        assert 'steps_pallas' not in sto and sto['steps_closed_form'] > 0, \\
+            sto
+        print('PALLAS_MESH_CAPABILITY_OK')
     """))
 
 
