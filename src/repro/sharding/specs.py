@@ -227,7 +227,7 @@ def maybe_wsc(x, *spec):
     am = compat.get_abstract_mesh()
     if am is None or not am.axis_names:
         return x
-    resolved = P(*(ambient_fit(d, e) for e, d in zip(x.shape, spec)))
+    resolved = P(*(ambient_fit(d, e) for d, e in zip(x.shape, spec)))
     return jax.lax.with_sharding_constraint(x, resolved)
 
 

@@ -224,6 +224,44 @@ def test_lane_bucket_boundary_widths():
     """))
 
 
+def test_maybe_wsc_layouts_on_host_mesh():
+    """Layout (not value) assertions for the in-jit maybe_wsc
+    constraints on the real (data=2, column=4) mesh. Bit-exactness
+    alone cannot catch a constraint that silently resolves to full
+    replication — the values are identical either way — so this pins
+    the resolved PartitionSpecs themselves: the jitted constraint
+    output must land on P('column','data'), the ragged C=5 shape must
+    degrade only its column dim, and a pallas-backed network_forward
+    must keep its outputs tiled over the column axis end to end."""
+    print(_run("""
+        from jax.sharding import PartitionSpec as P
+        x = np.zeros((8, 6, 7), np.float32)
+        with compat.set_mesh(mesh):
+            f = jax.jit(lambda a: SH.maybe_wsc(a, 'column', 'data', None))
+            assert f(x).sharding.spec == P('column', 'data'), \
+                f(x).sharding.spec
+            assert f(np.zeros((5, 6, 7), np.float32)).sharding.spec == \
+                P(None, 'data')                       # 5 % 4 -> repl dim 0
+        # no ambient mesh: identity, no constraint introduced
+        g = jax.jit(lambda a: SH.maybe_wsc(a, 'column', 'data', None))
+        assert 'column' not in str(g(x).sharding)
+        # end to end: the pallas shard_map path leaves outputs tiled
+        bnet = network.make_network(
+            [dataclasses.replace(lc, backend='pallas')
+             for lc in net.layers])
+        sp = jax.device_put(params, network.param_shardings(bnet, mesh))
+        with compat.set_mesh(mesh):
+            vs = jax.device_put(v, network.data_sharding(bnet, mesh,
+                                                         v.shape[0]))
+            fwd = jax.jit(lambda p, x: network.network_forward(p, x, bnet))
+            out, win = fwd(sp, vs)
+        assert out.sharding.spec == P('data', 'column'), out.sharding.spec
+        for w in win:
+            assert w.sharding.spec == P('data', 'column'), w.sharding.spec
+        print('MAYBE_WSC_LAYOUTS_OK')
+    """))
+
+
 def test_sharded_pipelined_pallas_bit_exact():
     """network_forward_pipelined composes with the shard_map Pallas path:
     the §5.4 schedule over pallas (and width-pinned pallas_compact)

@@ -136,3 +136,44 @@ def test_cache_pspec_kv_heads():
     # 2 KV heads don't divide 16 -> replicated head axis
     s = SH.cache_pspec(path, Leaf(40, 128, 32768, 2, 128), MESH)
     assert s == P(None, "data", None, None, None)
+
+
+def test_ambient_fit_resolution(monkeypatch):
+    """ambient_fit against a mocked ambient mesh: axis kept when it
+    divides the dim, dropped to replication otherwise, tuple entries
+    filtered to the axes the mesh has."""
+    from repro.sharding import compat
+
+    monkeypatch.setattr(compat, "get_abstract_mesh",
+                        lambda: FakeMesh({"data": 2, "column": 4}))
+    assert SH.ambient_fit(8, "column") == "column"
+    assert SH.ambient_fit(5, "column") is None       # 5 % 4 -> replication
+    assert SH.ambient_fit(6, None) is None
+    assert SH.ambient_fit(8, ("pod", "data")) == "data"  # mesh has no pod
+    assert SH.ambient_fit(8, ("data", "column")) == ("data", "column")
+    monkeypatch.setattr(compat, "get_abstract_mesh", lambda: None)
+    assert SH.ambient_fit(8, "column") is None       # no mesh -> identity
+
+
+def test_maybe_wsc_resolves_dims_in_order(monkeypatch):
+    """Regression: maybe_wsc must pair x.shape[i] with spec[i] when
+    resolving each dim. A swapped zip binds the int dim as the axis
+    entry, which silently resolves EVERY constraint to full replication
+    (values stay bit-exact, so only a spec-level assertion catches it)."""
+    from repro.sharding import compat
+
+    monkeypatch.setattr(compat, "get_abstract_mesh",
+                        lambda: FakeMesh({"data": 2, "column": 4}))
+    captured = {}
+
+    def fake_wsc(x, spec):
+        captured["spec"] = spec
+        return x
+
+    monkeypatch.setattr(jax.lax, "with_sharding_constraint", fake_wsc)
+    x = Leaf(8, 6, 7)
+    assert SH.maybe_wsc(x, "column", "data", None) is x
+    assert captured["spec"] == P("column", "data", None)
+    # non-dividing dims degrade individually, order preserved
+    SH.maybe_wsc(Leaf(5, 6, 7), "column", "data", None)
+    assert captured["spec"] == P(None, "data", None)
