@@ -1,8 +1,8 @@
 """Gamma-cycle pipelining sweep: depth x micro-batch count (DESIGN.md §5.4).
 
 Times one jitted gamma cycle for TNN stacks of increasing depth, barriered
-(``network_forward``: the whole batch crosses layer l before layer l+1
-starts) vs software-pipelined (``network_forward_pipelined``: M
+(``network.forward``: the whole batch crosses layer l before layer l+1
+starts) vs software-pipelined (``microbatches=M``: M
 micro-batches stream through the stack, layer l on micro-batch t while
 layer l+1 works micro-batch t-1). Every pipelined cell is first checked
 bit-exact against the barriered reference — the schedule must never change
@@ -82,7 +82,7 @@ def main(smoke: bool = False) -> None:
             v = jnp.asarray(sparse_volleys(rng, bsz, net.n_inputs, t_steps,
                                            density))
             fwd = jax.jit(
-                lambda p, x, n=net: network.network_forward(p, x, n)[0])
+                lambda p, x, n=net: network.forward(p, x, n).out)
             ref = np.asarray(fwd(params, v))
             base_us = time_fn(fwd, params, v, iters=iters)
             emit(f"pipeline/{backend}_d{depth}_barrier", base_us,
@@ -94,7 +94,7 @@ def main(smoke: bool = False) -> None:
                     continue
                 pf = jax.jit(
                     lambda p, x, n=net, m=m:
-                    network.network_forward_pipelined(p, x, n, m)[0])
+                    network.forward(p, x, n, microbatches=m).out)
                 got = np.asarray(pf(params, v))
                 if not np.array_equal(got, ref):   # schedule must be inert
                     raise AssertionError(

@@ -1,0 +1,110 @@
+"""LM serving benchmark: continuous vs static-wave batching (DESIGN.md §5.2).
+
+A mixed-length request population through ``Engine.serve``'s fixed slot
+pool, twice: ``continuous=True`` (freed decode slots re-fill from the
+pending queue mid-flight, per-slot KV-cache positions) vs
+``continuous=False`` (the static wave baseline — admission only when the
+pool has drained, so each wave's slowest request gates the next). Both
+runs are first checked token-identical against the per-request oracle —
+continuous batching must change throughput, never outputs (greedy
+decoding, per-row attention independence) — then timed.
+
+Rows report tokens/sec and engine steps; the acceptance row is the
+``continuous_vs_static`` speedup, which is >= 1 by construction at mixed
+request lengths (the wave pads every short request to its wave's slowest;
+continuous retires it and re-fills the row).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve_lm [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (emit, note_meta, reset_results, smoke_mode,
+                               write_json)
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.serve import Engine, ServeConfig
+
+
+def _population(n_requests: int, max_prompt: int, vocab: int,
+                seed: int = 0):
+    """Mixed-length prompts: the shape continuous batching feeds on."""
+    rng = np.random.RandomState(seed)
+    lengths = rng.randint(1, max_prompt + 1, size=n_requests)
+    return [rng.randint(3, vocab, (int(n),)).astype(np.int32)
+            for n in lengths]
+
+
+def _timed_serve(eng: Engine, prompts, max_new_tokens: int, n_slots: int,
+                 continuous: bool):
+    """(outputs, seconds, engine steps) for one serve pass (pre-warmed)."""
+    t0 = time.perf_counter()
+    outs = eng.serve(prompts, max_new_tokens, n_slots=n_slots,
+                     continuous=continuous)
+    return outs, time.perf_counter() - t0, eng.n_steps
+
+
+def main(smoke: bool = False) -> None:
+    smoke = smoke or smoke_mode()
+    reset_results()
+    if smoke:
+        n_requests, max_prompt, max_new, n_slots = 10, 10, 6, 3
+    else:
+        n_requests, max_prompt, max_new, n_slots = 48, 24, 16, 8
+    cfg = get_config("internlm2-1.8b").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(max_len=max_prompt + max_new + 2))
+    prompts = _population(n_requests, max_prompt, cfg.vocab_size)
+    note_meta(model=cfg.name, n_requests=n_requests, n_slots=n_slots,
+              max_prompt=max_prompt, max_new_tokens=max_new,
+              prompt_tokens=int(sum(len(p) for p in prompts)))
+
+    # correctness gate: both schedules must match the per-request oracle
+    # token for token before any timing is trusted
+    oracle = [eng.serve([p], max_new) [0] for p in prompts]
+    for continuous in (True, False):
+        outs = eng.serve(prompts, max_new, n_slots=n_slots,
+                         continuous=continuous)
+        for i, (got, want) in enumerate(zip(outs, oracle)):
+            if not np.array_equal(got, want):
+                raise AssertionError(
+                    f"{'continuous' if continuous else 'wave'} serving "
+                    f"changed request {i}'s tokens")
+
+    # timed passes (the gate above doubles as jit warmup)
+    results = {}
+    for label, continuous in (("static_wave", False), ("continuous", True)):
+        outs, dt, steps = _timed_serve(eng, prompts, max_new, n_slots,
+                                       continuous)
+        total_tokens = int(sum(len(o) for o in outs))
+        tps = total_tokens / dt
+        results[label] = (dt, steps, tps)
+        emit(f"serve/lm_B{n_slots}_{label}", dt * 1e6 / total_tokens,
+             f"{tps:.0f}_tokens_per_s_{steps}_steps",
+             n_slots=n_slots, steps=steps, continuous=continuous)
+        print(f"# {label:12s} {tps:8.0f} tokens/s  {steps:4d} steps")
+
+    wave_dt, wave_steps, _ = results["static_wave"]
+    cont_dt, cont_steps, _ = results["continuous"]
+    emit("serve/lm_continuous_vs_static", cont_dt * 1e6,
+         f"{wave_dt / cont_dt:.2f}x_speedup_"
+         f"{wave_steps}to{cont_steps}_steps",
+         speedup=wave_dt / cont_dt, steps_static=wave_steps,
+         steps_continuous=cont_steps)
+    print(f"# continuous vs static: {wave_dt / cont_dt:.2f}x wall-clock, "
+          f"{wave_steps} -> {cont_steps} steps")
+    write_json("serve_lm", smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI plumbing validation")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -15,6 +15,7 @@ Run:  PYTHONPATH=src python -m benchmarks.bench_serve_tnn [--smoke]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -86,6 +87,31 @@ def main(smoke: bool = False, backends=None) -> None:
             print(f"# B={n_slots:3d} {backend:12s} {vps:8.0f} volleys/s "
                   f"({vps / base_vps:.1f}x vs B=1 {backend}) "
                   f"[{total} volleys, {n_clients} clients]")
+
+    # recurrent streams: same population through a stateful stack — each
+    # slot carries its stream's previous-cycle volley (state in the slot),
+    # so throughput includes the carry scatter/gather bookkeeping
+    rnet = network.make_network(
+        [dataclasses.replace(lc, recurrent=True) for lc in net.layers])
+    rparams = network.init_network(jax.random.PRNGKey(0), rnet)
+    n_slots = slot_sweep[-1]
+    eng = tnn_engine.TNNEngine(
+        rparams, rnet, tnn_engine.TNNServeConfig(n_slots=n_slots))
+    results = eng.serve(list(streams))       # warmup + correctness pass
+    for s, r in zip(streams, results):
+        want = tnn_engine.reference_outputs(rparams, rnet, s)
+        if not np.array_equal(want, r):      # carries must be inert to batching
+            raise AssertionError("recurrent serve diverges from reference")
+    eng.reset_stats()
+    for s in streams:
+        eng.submit(s)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    emit(f"serve/tnn_B{n_slots}_recurrent", dt * 1e6 / total,
+         f"{total / dt:.0f}_volleys_per_s_stateful")
+    print(f"# B={n_slots:3d} recurrent     {total / dt:8.0f} volleys/s "
+          f"[stateful slots, {n_clients} clients]")
     write_json("serve_tnn", smoke=smoke)
 
 

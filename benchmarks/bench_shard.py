@@ -1,6 +1,6 @@
 """Sharded TNN sweep: columns x mesh shape x engine (DESIGN.md §6.4).
 
-Measures one jitted ``network_forward`` gamma cycle for a single-layer
+Measures one jitted ``network.forward`` gamma cycle for a single-layer
 TNN as the (columns, neurons) plane is sharded over a ``("data",
 "column")`` mesh (`sharding.specs.tnn_mesh`), for each neuron-bank
 engine that survives the mesh:
@@ -117,7 +117,7 @@ def main(smoke: bool = False) -> None:
         net = network.make_network([cfg])
         params = network.init_network(jax.random.PRNGKey(0), net)
         v = sparse_volleys(rng, bsz, net.n_inputs, t_steps, density)
-        ref = np.asarray(network.network_forward(params, v, net)[0])
+        ref = np.asarray(network.forward(params, v, net).out)
         # static lane-bucketed compaction width: pallas_compact compiles
         # against it (measured on the gathered receptive-field view, the
         # same quantity the serve engine buckets per step)
@@ -147,8 +147,7 @@ def main(smoke: bool = False) -> None:
                 for engine in ENGINES:
                     enet = engine_nets[engine]
                     fwd = jax.jit(
-                        lambda p, x, n=enet: network.network_forward(
-                            p, x, n)[0])
+                        lambda p, x, n=enet: network.forward(p, x, n).out)
                     got = np.asarray(fwd(sp, vs))
                     if not np.array_equal(got, ref):  # sharding is inert
                         raise AssertionError(

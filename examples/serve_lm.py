@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.data import tokenizer as tok
 from repro.models import transformer as T
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve import Engine, ServeConfig
 
 
 def main():

@@ -4,7 +4,7 @@ Simulates N concurrent clients, each streaming a short burst of GRF-encoded
 feature vectors (Gaussian receptive field population coding — the sparse,
 bursty volley shape the Catwalk dendrite is built for), served through the
 slot-based TNN engine: requests flow through a fixed pool of B slots with
-continuous re-fill, every gamma cycle one batched ``network_forward`` over
+continuous re-fill, every gamma cycle one batched ``network.forward`` over
 the live slots (backend-dispatched ``fire_times_bank``).
 
 Verifies the engine's spike-time outputs are bit-exact against unbatched
@@ -81,10 +81,10 @@ def main():
             # one pass serves double duty: stream 0's reference outputs
             # AND the per-layer density diagnostic printed below come from
             # the same stack run (engine outputs are bit-exact vs batched
-            # and unbatched network_forward alike)
-            ref, _, per_layer = network.network_forward_with_densities(
-                params, jnp.asarray(stream), net)
-            ref = np.asarray(ref)
+            # and unbatched network.forward alike)
+            res = network.forward(params, jnp.asarray(stream), net,
+                                  with_densities=True)
+            ref, per_layer = np.asarray(res.out), res.densities
         else:
             ref = tnn_engine.reference_outputs(params, net, stream)
         if not np.array_equal(ref, result):

@@ -1,0 +1,29 @@
+"""Deprecation plumbing for ``repro``'s back-compat wrappers.
+
+Tier-1 runs with :class:`ReproDeprecationWarning` promoted to an error
+(``pyproject.toml`` ``filterwarnings``), so a deprecated wrapper cannot be
+reintroduced into first-party code paths silently: any in-repo caller of a
+deprecated entry point fails the suite, while out-of-repo users get a
+normal warning pointing at the replacement.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """Deprecation raised by ``repro``'s own back-compat wrappers.
+
+    A dedicated subclass so the test suite can promote exactly these to
+    errors without drowning in third-party DeprecationWarnings.
+    """
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Emit the standard deprecation message for wrapper ``old``."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead (see DESIGN.md §6.3)",
+        ReproDeprecationWarning,
+        stacklevel=3,
+    )

@@ -38,11 +38,14 @@ from repro.sharding import specs as sharding_specs
 #: axis entries for the in-layer sharding constraints (identity when no
 #: mesh is active — see sharding.specs.maybe_wsc / tnn_volley_axes)
 _COL, _DP, _ = sharding_specs.tnn_volley_axes()
+#: axis entries for the recurrent carry (B, n_outputs): batch over DP,
+#: flattened output lines over "column" (sharding.specs.tnn_carry_axes)
+_CARRY = sharding_specs.tnn_carry_axes()
 
 
 @dataclasses.dataclass(frozen=True)
 class TNNLayer:
-    """Static layer description; weights live in a (C, Q, rf_size) array."""
+    """Static layer description; weights live in a (C, Q, rf_total) array."""
 
     n_columns: int
     rf_size: int
@@ -55,6 +58,13 @@ class TNNLayer:
     #: receptive-field stride between adjacent columns; None = rf_size
     #: (disjoint windows). rf_stride < rf_size gives overlapping fields.
     rf_stride: Optional[int] = None
+    #: recurrent input path (DESIGN.md §6.1): each column additionally sees
+    #: its OWN Q post-WTA output lines from the previous gamma cycle,
+    #: appended after the feedforward receptive field — Q extra columns in
+    #: the weight plane, so weights become (C, Q, rf_size + Q). A silent
+    #: (all-NO_SPIKE) carry makes the cycle exactly feedforward: silent
+    #: lines launch no ramp and contribute nothing to any neuron.
+    recurrent: bool = False
     #: neuron-bank engine (DESIGN.md §2/§3.3): the sparse engines ("event",
     #: "pallas_compact") compact the post-gather (C, B, rf) tensor in ONE
     #: call inside fire_times_bank, so one relocation serves all columns.
@@ -83,6 +93,11 @@ class TNNLayer:
         """Output lines the layer produces (one per neuron, flattened)."""
         return self.n_columns * self.n_neurons
 
+    @property
+    def rf_total(self) -> int:
+        """Dendritic inputs per neuron: rf_size + Q recurrent lines."""
+        return self.rf_size + (self.n_neurons if self.recurrent else 0)
+
     def rf_index(self) -> jax.Array:
         """(C, rf_size) int32 input-line ids per column."""
         starts = jnp.arange(self.n_columns, dtype=jnp.int32) * self.stride
@@ -90,24 +105,33 @@ class TNNLayer:
 
     def neuron_config(self) -> neuron.NeuronConfig:
         return neuron.NeuronConfig(
-            n_inputs=self.rf_size, threshold=self.threshold,
+            n_inputs=self.rf_total, threshold=self.threshold,
             t_steps=self.t_steps, dendrite=self.dendrite, k=self.k)
 
     def column_config(self):
         """Single-column view (for per-column tooling / equivalence tests)."""
         from repro.core import column
         return column.ColumnConfig(
-            n_inputs=self.rf_size, n_neurons=self.n_neurons,
+            n_inputs=self.rf_total, n_neurons=self.n_neurons,
             threshold=self.threshold, t_steps=self.t_steps,
             dendrite=self.dendrite, k=self.k, w_max=self.w_max,
             stdp=self.stdp, backend=self.backend)
 
 
 def init_layer(key: jax.Array, cfg: TNNLayer) -> jax.Array:
-    """Random initial weights (C, Q, rf_size) uniform over [0, w_max]."""
+    """Random initial weights (C, Q, rf_total) uniform over [0, w_max]."""
     return jax.random.uniform(
-        key, (cfg.n_columns, cfg.n_neurons, cfg.rf_size),
+        key, (cfg.n_columns, cfg.n_neurons, cfg.rf_total),
         minval=0.0, maxval=float(cfg.w_max))
+
+
+def carry_init(cfg: TNNLayer, batch: int) -> jax.Array:
+    """All-silent recurrent carry ``(batch, n_outputs)`` for a layer.
+
+    The previous-cycle output volley fed to the first gamma cycle of a
+    stream: all-``NO_SPIKE``, so cycle 0 of a recurrent layer is bit-exact
+    with the same layer run feedforward (silent lines are inert)."""
+    return jnp.full((batch, cfg.n_outputs), coding.NO_SPIKE, jnp.int32)
 
 
 def stage_init(cfg: TNNLayer, batch: int) -> jax.Array:
@@ -120,13 +144,28 @@ def stage_init(cfg: TNNLayer, batch: int) -> jax.Array:
     return jnp.full((batch, cfg.n_inputs), coding.NO_SPIKE, jnp.int32)
 
 
-def _gather_rf(volleys: jax.Array, cfg: TNNLayer) -> jax.Array:
-    """(B, n_inputs) volleys -> (C, B, rf_size) per-column slices."""
+def _gather_rf(volleys: jax.Array, cfg: TNNLayer,
+               carry: Optional[jax.Array] = None) -> jax.Array:
+    """(B, n_inputs) volleys -> (C, B, rf_total) per-column slices.
+
+    For a recurrent layer, each column's slice is its feedforward window
+    followed by that column's OWN Q previous-cycle output lines from
+    ``carry`` (B, n_outputs); ``carry=None`` feeds the silent volley.
+    """
     rf = volleys[:, cfg.rf_index()]           # (B, C, rf)
-    return jnp.swapaxes(rf, 0, 1)             # (C, B, rf)
+    rf = jnp.swapaxes(rf, 0, 1)               # (C, B, rf)
+    if not cfg.recurrent:
+        return rf
+    b = volleys.shape[0]
+    if carry is None:
+        carry = carry_init(cfg, b)
+    rec = carry.reshape(b, cfg.n_columns, cfg.n_neurons)
+    rec = jnp.swapaxes(rec, 0, 1)             # (C, B, Q)
+    return jnp.concatenate([rf, rec], axis=-1)  # (C, B, rf + Q)
 
 
-def layer_input_density(volleys: jax.Array, cfg: TNNLayer):
+def layer_input_density(volleys: jax.Array, cfg: TNNLayer,
+                        carry: Optional[jax.Array] = None):
     """Measured fraction of contributing lines across the layer's
     receptive fields (host diagnostic; ``None`` under jit).
 
@@ -137,27 +176,43 @@ def layer_input_density(volleys: jax.Array, cfg: TNNLayer):
     if compat.is_tracer(volleys):
         return None
     v = volleys[None, :] if volleys.ndim == 1 else volleys
-    return compaction.measured_density(_gather_rf(v, cfg), cfg.t_steps)
+    if carry is not None and carry.ndim == 1:
+        carry = carry[None, :]
+    return compaction.measured_density(_gather_rf(v, cfg, carry),
+                                       cfg.t_steps)
 
 
-def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer
+def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer,
+                  carry: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, jax.Array]:
     """Run one gamma cycle for a batch of volleys.
 
     Args:
-      weights: (C, Q, rf_size) float; rounded to ints (hardware registers).
+      weights: (C, Q, rf_total) float; rounded to ints (hardware registers).
       volleys: (B, n_inputs) int32 spike volleys — or (n_inputs,) for one.
+      carry: previous-cycle output volley (B, n_outputs) int32 for a
+        recurrent layer (1-D for a single volley); None = silent carry.
+        Must be None for a non-recurrent layer.
 
     Returns:
       (out_times, winners): out_times (B, C, Q) int32 post-WTA spike times
       (NO_SPIKE for losers); winners (B, C) int32 per-column winner index,
       -1 where no neuron in the column fired. 1-D input gives (C, Q)/(C,).
+      ``out_times.reshape(B, n_outputs)`` is the next cycle's carry.
     """
+    if carry is not None and not cfg.recurrent:
+        raise ValueError("carry given for a non-recurrent layer")
     single = volleys.ndim == 1
     if single:
         volleys = volleys[None, :]
+        if carry is not None and carry.ndim == 1:
+            carry = carry[None, :]
+    if carry is not None:
+        # pin the carry like a stage buffer: batch over DP, output lines
+        # over "column" (sharding.specs.tnn_carry_axes; identity w/o mesh).
+        carry = sharding_specs.maybe_wsc(carry, *_CARRY)
     w_int = jnp.round(weights).astype(jnp.int32)
-    times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
+    times_rf = _gather_rf(volleys, cfg, carry)                # (C, B, rft)
     # under an active mesh, pin the (columns, neurons) plane: columns over
     # "column", batch over DP (DESIGN.md §6.4; identity without a mesh).
     # This is also the exact layout the shard_map Pallas fast path consumes
@@ -184,18 +239,23 @@ def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer
 
 
 def layer_step(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer,
-               key: Optional[jax.Array] = None
+               key: Optional[jax.Array] = None,
+               carry: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Forward + minibatch STDP. Returns (new_weights, out_times, winners).
 
     Per-volley STDP deltas are evaluated at the shared pre-step weights and
     accumulated across the batch (``cfg.stdp_reduction``); each column
-    learns only from its own receptive-field slice and WTA outcome.
+    learns only from its own receptive-field slice and WTA outcome. For a
+    recurrent layer the STDP input slice includes the carry lines, so the
+    recurrent weight columns learn under the same rule as feedforward ones.
     """
     if volleys.ndim == 1:
         volleys = volleys[None, :]
-    out_times, winners = layer_forward(weights, volleys, cfg)
-    times_rf = _gather_rf(volleys, cfg)                       # (C, B, rf)
+        if carry is not None and carry.ndim == 1:
+            carry = carry[None, :]
+    out_times, winners = layer_forward(weights, volleys, cfg, carry)
+    times_rf = _gather_rf(volleys, cfg, carry)                # (C, B, rft)
     times_rf = sharding_specs.maybe_wsc(times_rf, _COL, _DP, None)
     out_cb = jnp.swapaxes(out_times, 0, 1)                    # (C, B, Q)
     win_cb = jnp.swapaxes(winners, 0, 1)                      # (C, B)

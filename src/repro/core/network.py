@@ -11,18 +11,27 @@ input volley of the next layer. Flattened, layer l emits
 Learning is layer-local (greedy): STDP in every layer uses only that
 layer's own input slice and WTA outcome, so one forward sweep trains all
 layers simultaneously — no backward pass exists in a TNN. All functions
-are jit/scan friendly; weights are a tuple of (C, Q, rf) arrays.
+are jit/scan friendly; weights are a tuple of (C, Q, rf_total) arrays.
+
+Stateful streams: a recurrent layer (``TNNLayer.recurrent``) also sees its
+own previous-cycle output volley, so the network-level entry point is
+:func:`forward` — one call per gamma cycle threading an explicit per-layer
+``carry`` (previous outputs in, this cycle's outputs out). The historical
+``network_forward`` / ``network_forward_pipelined`` /
+``network_forward_with_densities`` trio are thin deprecated wrappers over
+it (DESIGN.md §6.3).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
+from repro import _deprecation
 from repro.core import coding
 from repro.core import layer as layer_mod
 from repro.core import neuron
@@ -94,32 +103,129 @@ def init_network(key: jax.Array, cfg: TNNNetwork,
     return params
 
 
+class ForwardResult(NamedTuple):
+    """Everything one gamma cycle produces (:func:`forward`).
+
+    ``out``: (B, C_last, Q_last) int32 post-WTA spike times of the last
+    layer. ``winners``: per-layer (B, C_l) winner indices (the network's
+    spike-train activation trace). ``carry``: per-layer next-cycle carry —
+    layer l's flattened output volley (B, n_outputs_l) for recurrent
+    layers, ``None`` for feedforward ones; feed it back as the next call's
+    ``carry`` to advance a stream. ``densities``: per-layer measured input
+    densities when requested (``with_densities=True``), else ``None``. A
+    1-D single volley drops the batch dim from every array field.
+    """
+
+    out: jax.Array
+    winners: Tuple[jax.Array, ...]
+    carry: Tuple[Optional[jax.Array], ...]
+    densities: Optional[List[Optional[float]]]
+
+
+def init_carry(cfg: TNNNetwork, batch: int
+               ) -> Tuple[Optional[jax.Array], ...]:
+    """Per-layer all-silent carry for the first gamma cycle of a stream:
+    (batch, n_outputs_l) all-``NO_SPIKE`` for recurrent layers, ``None``
+    for feedforward ones. ``forward(..., carry=None)`` feeds exactly this,
+    so a recurrent stack's cycle 0 is bit-exact feedforward."""
+    return tuple(layer_mod.carry_init(lc, batch) if lc.recurrent else None
+                 for lc in cfg.layers)
+
+
+def forward(params: Sequence[jax.Array], volleys: jax.Array,
+            cfg: TNNNetwork, *, microbatches: int = 1,
+            with_densities: bool = False,
+            carry: Optional[Sequence[Optional[jax.Array]]] = None
+            ) -> ForwardResult:
+    """One gamma cycle through the whole stack — THE forward entry point.
+
+    Unifies the historical variant trio: ``microbatches > 1`` runs the
+    §5.4 software-pipelined schedule (bit-exact vs the barriered one for
+    every backend and any M), ``with_densities=True`` records each layer's
+    measured input density on the same activations (host-side diagnostic;
+    barriered only), and ``carry`` threads recurrent state — per-layer
+    previous-cycle output volleys, ``None`` entries (or ``carry=None``)
+    meaning the all-silent first cycle of a stream
+    (:func:`init_carry`).
+
+    Pipelined carry scheduling: layer l consumes micro-batch j at tick
+    l + j, so each recurrent layer's carry slab is fed to the scan shifted
+    by l ticks (silent blocks elsewhere) and its per-tick outputs are
+    collected back into the next cycle's carry — state threads through the
+    pipeline with no extra barrier.
+
+    Args:
+      params:  per-layer weights, layer l shaped (C_l, Q_l, rf_total_l).
+      volleys: (B, n_inputs) int32 input spike volleys — or (n_inputs,)
+        for a single volley (batch dim dropped from every result field).
+      microbatches: pipeline micro-batches M (clamped to [1, B]).
+      with_densities: also report per-layer measured input densities
+        (requires ``microbatches == 1``).
+      carry: per-layer carry-in, layer l (B, n_outputs_l) int32 for
+        recurrent layers (1-D for a single volley), ``None`` for
+        feedforward ones; ``carry=None`` = all-silent.
+
+    Returns:
+      :class:`ForwardResult` — ``result.carry`` is the carry-in for the
+      stream's next gamma cycle.
+    """
+    n_layers = len(cfg.layers)
+    if carry is None:
+        carry_in: Tuple[Optional[jax.Array], ...] = (None,) * n_layers
+    else:
+        if len(carry) != n_layers:
+            raise ValueError(f"carry has {len(carry)} entries for "
+                             f"{n_layers} layers")
+        carry_in = tuple(carry)
+    single = volleys.ndim == 1
+    x = volleys[None, :] if single else volleys
+    x = x.astype(jnp.int32)
+    if single:
+        carry_in = tuple(c[None, :] if c is not None and c.ndim == 1 else c
+                         for c in carry_in)
+    b = x.shape[0]
+    m, rows = microbatch_split(b, microbatches)
+    if with_densities and m > 1:
+        raise ValueError("with_densities requires microbatches == 1 "
+                         "(density measurement is a host-side whole-batch "
+                         "diagnostic)")
+    if m > 1:
+        res = _forward_pipelined(params, x, cfg, carry_in, m, rows)
+    else:
+        res = _forward_barriered(params, x, cfg, carry_in, with_densities)
+    if single:
+        res = ForwardResult(
+            out=res.out[0],
+            winners=tuple(w[0] for w in res.winners),
+            carry=tuple(c if c is None else c[0] for c in res.carry),
+            densities=res.densities)
+    return res
+
+
+def _forward_barriered(params, x, cfg, carry_in, with_densities
+                       ) -> ForwardResult:
+    """Whole-batch barrier at every layer (the M=1 schedule)."""
+    winners_all, carry_out = [], []
+    densities: Optional[list] = [] if with_densities else None
+    out = None
+    for w, lc, c in zip(params, cfg.layers, carry_in):
+        if densities is not None:
+            densities.append(layer_mod.layer_input_density(x, lc, c))
+        out, winners = layer_mod.layer_forward(w, x, lc, c)
+        winners_all.append(winners)
+        x = out.reshape(out.shape[0], lc.n_outputs)   # spike times forward
+        carry_out.append(x if lc.recurrent else None)
+    return ForwardResult(out, tuple(winners_all), tuple(carry_out),
+                         densities)
+
+
 def network_forward(params: Sequence[jax.Array], volleys: jax.Array,
                     cfg: TNNNetwork
                     ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
-    """One gamma cycle through the whole stack.
-
-    Args:
-      params:  per-layer weights, layer l shaped (C_l, Q_l, rf_l).
-      volleys: (B, n_inputs) int32 input spike volleys.
-
-    Returns:
-      (out_times, winners): out_times (B, C_last, Q_last) int32 post-WTA
-      spike times of the last layer; winners — per-layer (B, C_l) winner
-      indices (the network's spike-train activation trace). A 1-D single
-      volley gives (C_last, Q_last) / per-layer (C_l,).
-    """
-    single = volleys.ndim == 1
-    x = volleys[None, :] if single else volleys
-    winners_all = []
-    out = None
-    for w, lc in zip(params, cfg.layers):
-        out, winners = layer_mod.layer_forward(w, x, lc)
-        winners_all.append(winners)
-        x = out.reshape(out.shape[0], lc.n_outputs)   # spike times forward
-    if single:
-        return out[0], tuple(w[0] for w in winners_all)
-    return out, tuple(winners_all)
+    """Deprecated wrapper: use :func:`forward`. Returns (out, winners)."""
+    _deprecation.warn_deprecated("network_forward", "network.forward")
+    res = forward(params, volleys, cfg)
+    return res.out, res.winners
 
 
 def microbatch_split(batch: int, microbatches: int) -> Tuple[int, int]:
@@ -139,16 +245,13 @@ def microbatch_split(batch: int, microbatches: int) -> Tuple[int, int]:
     return -(-batch // rows), rows
 
 
-def network_forward_pipelined(params: Sequence[jax.Array],
-                              volleys: jax.Array, cfg: TNNNetwork,
-                              microbatches: int = 2
-                              ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+def _forward_pipelined(params, x, cfg, carry_in, m, rows) -> ForwardResult:
     """One gamma cycle through the stack, software-pipelined (§5.4).
 
     Learning and inference in a TNN are layer-local, so layer l never
-    needs anything from layer l+1 — ``network_forward``'s whole-batch
+    needs anything from layer l+1 — the barriered schedule's whole-batch
     barrier at every layer is a scheduling choice, not a data dependency.
-    This variant splits the batch into M micro-batches and streams them:
+    This schedule splits the batch into M micro-batches and streams them:
     at pipeline tick t, layer l computes micro-batch t - l, so all L
     layers run concurrently on distinct micro-batches (``lax.scan`` over
     a shifted stage buffer). Warmup/drain ticks feed all-``NO_SPIKE``
@@ -158,25 +261,23 @@ def network_forward_pipelined(params: Sequence[jax.Array],
     by the §6.5 stage-to-shard rule (micro-batch over ``data``, output
     lines over ``column``); without one the constraints are identity.
 
-    Bit-exact vs :func:`network_forward` for every backend and any M:
-    ``microbatches`` is clamped to [1, B], a ragged ``B % M != 0`` batch
-    is NO_SPIKE-padded to full micro-batches, and M=1 degenerates to the
-    barriered schedule (modulo the scan). Under an active mesh the tick
-    scan is fully unrolled (the tick count M + L - 1 is static): XLA's
+    Recurrent carries ride the same schedule: layer l's carry slab
+    (m, rows, n_outputs_l) is shifted by l leading silent ticks so tick
+    l + j feeds micro-batch j's carry rows, and the layer's per-tick
+    flattened outputs are collected from ticks l .. l+m-1 into the next
+    cycle's carry — the carry is per-row state, so it micro-batches
+    exactly like the input volleys do.
+
+    Bit-exact vs the barriered schedule for every backend and any M: a
+    ragged ``B % M != 0`` batch is NO_SPIKE-padded to full micro-batches
+    (padding rows carry silent state). Under an active mesh the tick scan
+    is fully unrolled (the tick count M + L - 1 is static): XLA's
     while-loop carry layout propagation miscompiles a cross-layer stage
     carry on a data-sharded mesh (jax 0.4.x — wrong *values*, not just
     layouts), and straight-line code sidesteps the loop entirely.
-
-    Args/returns: as :func:`network_forward`, plus ``microbatches``.
     """
-    single = volleys.ndim == 1
-    x = volleys[None, :] if single else volleys
-    x = x.astype(jnp.int32)
     b = x.shape[0]
-    if b == 0:   # nothing to stream; match the barriered empty outputs
-        return network_forward(params, volleys, cfg)
     n_layers = len(cfg.layers)
-    m, rows = microbatch_split(b, microbatches)
     if m * rows > b:             # ragged tail: NO_SPIKE rows are inert
         # jnp.pad, not a concat with a replicated block: concatenating a
         # fresh all-NO_SPIKE array onto the data-sharded batch trips the
@@ -187,89 +288,113 @@ def network_forward_pipelined(params: Sequence[jax.Array],
     if n_layers > 1:             # drain ticks flush the last micro-batches
         xs = jnp.pad(xs, ((0, n_layers - 1), (0, 0), (0, 0)),
                      constant_values=int(coding.NO_SPIKE))
+    # per-layer carry slabs, tick-aligned: layer l sees micro-batch j's
+    # carry at tick l + j, silent blocks during its warmup/drain ticks.
+    carry_xs = []
+    for i, (lc, c) in enumerate(zip(cfg.layers, carry_in)):
+        if not lc.recurrent:
+            carry_xs.append(None)
+            continue
+        c_full = c if c is not None else layer_mod.carry_init(lc, b)
+        if m * rows > b:
+            c_full = jnp.pad(c_full, ((0, m * rows - b), (0, 0)),
+                             constant_values=int(coding.NO_SPIKE))
+        cx = c_full.reshape(m, rows, lc.n_outputs)
+        cx = jnp.pad(cx, ((i, n_layers - 1 - i), (0, 0), (0, 0)),
+                     constant_values=int(coding.NO_SPIKE))
+        carry_xs.append(cx)
     stage0 = tuple(layer_mod.stage_init(lc, rows) for lc in cfg.layers[1:])
     stage_axes = sharding_specs.tnn_stage_axes()
+    carry_axes = sharding_specs.tnn_carry_axes()
 
-    def tick(stage, x_t):
-        new_stage, wins, out = [], [], None
+    def tick(stage, xs_t):
+        x_t, c_t = xs_t
+        new_stage, wins, couts, out = [], [], [], None
         for i, (w, lc) in enumerate(zip(params, cfg.layers)):
             inp = x_t if i == 0 else stage[i - 1]
-            out, win = layer_mod.layer_forward(w, inp, lc)
+            out, win = layer_mod.layer_forward(w, inp, lc, c_t[i])
             wins.append(win)
+            flat = out.reshape(rows, lc.n_outputs)
+            couts.append(sharding_specs.maybe_wsc(flat, *carry_axes)
+                         if lc.recurrent else None)
             if i + 1 < n_layers:
-                nxt = out.reshape(rows, lc.n_outputs)
-                new_stage.append(sharding_specs.maybe_wsc(nxt, *stage_axes))
-        return tuple(new_stage), (out, tuple(wins))
+                new_stage.append(sharding_specs.maybe_wsc(flat,
+                                                          *stage_axes))
+        return tuple(new_stage), (out, tuple(wins), tuple(couts))
 
     ticks = m + n_layers - 1
     unroll = ticks if neuron.mesh_active() else 1
-    _, (ys_out, ys_win) = jax.lax.scan(tick, stage0, xs, unroll=unroll)
+    _, (ys_out, ys_win, ys_carry) = jax.lax.scan(
+        tick, stage0, (xs, tuple(carry_xs)), unroll=unroll)
     # layer l's tick-t output belongs to micro-batch t - l: the last
     # layer's valid outputs are ticks L-1 .. L-1+M-1, layer l's winners
-    # ticks l .. l+M-1; everything outside is warmup/drain padding.
+    # (and carry blocks) ticks l .. l+M-1; outside is warmup/drain pad.
     out = ys_out[n_layers - 1:]
     out = out.reshape(m * rows, *out.shape[2:])[:b]
     winners = tuple(
         ys_win[i][i:i + m].reshape(m * rows, -1)[:b]
         for i in range(n_layers))
-    if single:
-        return out[0], tuple(w[0] for w in winners)
-    return out, winners
+    carry_out = tuple(
+        ys_carry[i][i:i + m].reshape(m * rows, lc.n_outputs)[:b]
+        if lc.recurrent else None
+        for i, lc in enumerate(cfg.layers))
+    return ForwardResult(out, winners, carry_out, None)
+
+
+def network_forward_pipelined(params: Sequence[jax.Array],
+                              volleys: jax.Array, cfg: TNNNetwork,
+                              microbatches: int = 2
+                              ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Deprecated wrapper: use :func:`forward` with ``microbatches=M``.
+    Returns (out, winners)."""
+    _deprecation.warn_deprecated("network_forward_pipelined",
+                                 "network.forward(..., microbatches=M)")
+    res = forward(params, volleys, cfg, microbatches=microbatches)
+    return res.out, res.winners
 
 
 def network_forward_with_densities(params: Sequence[jax.Array],
                                    volleys: jax.Array, cfg: TNNNetwork):
-    """:func:`network_forward` that also reports per-layer input densities.
-
-    One pass: each layer's measured density (the fraction of contributing
-    lines its neuron banks see — layer 0 reflects the input encoding's
-    sparsity, deeper layers the 1-WTA thinning, at most one hot line per
-    column so density <= 1/n_neurons there) is recorded on the same
-    activations the forward computes, so callers that want both outputs
-    and the §3.3 policy diagnostic don't run the stack twice. Host-side:
-    densities are ``None`` under jit (``layer_input_density``).
-
-    Returns (out_times, winners, densities).
-    """
-    single = volleys.ndim == 1
-    x = volleys[None, :] if single else volleys
-    densities = []
-    winners_all = []
-    out = None
-    for w, lc in zip(params, cfg.layers):
-        densities.append(layer_mod.layer_input_density(x, lc))
-        out, winners = layer_mod.layer_forward(w, x, lc)
-        winners_all.append(winners)
-        x = out.reshape(out.shape[0], lc.n_outputs)
-    if single:
-        return out[0], tuple(w[0] for w in winners_all), densities
-    return out, tuple(winners_all), densities
+    """Deprecated wrapper: use :func:`forward` with
+    ``with_densities=True``. Returns (out, winners, densities)."""
+    _deprecation.warn_deprecated(
+        "network_forward_with_densities",
+        "network.forward(..., with_densities=True)")
+    res = forward(params, volleys, cfg, with_densities=True)
+    return res.out, res.winners, res.densities
 
 
 def measured_densities(params: Sequence[jax.Array], volleys: jax.Array,
                        cfg: TNNNetwork):
-    """Per-layer measured input densities for one concrete batch (thin
-    wrapper over :func:`network_forward_with_densities` for callers that
-    only want the diagnostic)."""
-    return network_forward_with_densities(params, volleys, cfg)[2]
+    """Per-layer measured input densities for one concrete batch — each
+    layer's density (the fraction of contributing lines its neuron banks
+    see — layer 0 reflects the input encoding's sparsity, deeper layers
+    the 1-WTA thinning, at most one hot line per column so density <=
+    1/n_neurons there) recorded on the same activations one forward pass
+    computes (§3.3 policy diagnostic). Host-side: entries are ``None``
+    under jit (``layer_input_density``)."""
+    return forward(params, volleys, cfg, with_densities=True).densities
 
 
 def sparse_widths(cfg: TNNNetwork, first: int) -> Tuple[int, ...]:
     """Static per-layer compaction widths for a jitted sparse stack (§3.3).
 
     Layer 0 gets ``first`` — the caller's measured-and-bucketed active-line
-    bound for its receptive-field gather (the serve engine computes it
-    host-side per step; see :func:`repro.core.compaction.bucket_width`).
-    Deeper layers need no measurement: layer l consumes layer l-1's
-    post-WTA lines, at most one active per block of ``Q_prev``, so an
-    ``rf``-wide window covers at most ``(rf - 2) // Q_prev + 2`` blocks —
-    a structural bound that can never drop an active line.
+    bound for its FEEDFORWARD receptive-field gather (the serve engine
+    computes it host-side per step; see
+    :func:`repro.core.compaction.bucket_width`). Deeper layers need no
+    measurement: layer l consumes layer l-1's post-WTA lines, at most one
+    active per block of ``Q_prev``, so an ``rf``-wide window covers at most
+    ``(rf - 2) // Q_prev + 2`` blocks — a structural bound that can never
+    drop an active line. A recurrent layer sees Q extra carry lines that
+    are themselves a post-WTA volley of its own column — at most one
+    active — so its width grows by exactly 1.
     """
-    widths = [max(int(first), 1)]
+    widths = [max(int(first), 1) + (1 if cfg.layers[0].recurrent else 0)]
     for prev, cur in zip(cfg.layers, cfg.layers[1:]):
         q, rf = prev.n_neurons, cur.rf_size
         bound = 1 if rf <= 1 else min(rf, (rf - 2) // q + 2, prev.n_columns)
-        widths.append(max(bound, 1))
+        widths.append(max(bound, 1) + (1 if cur.recurrent else 0))
     return tuple(widths)
 
 

@@ -26,9 +26,54 @@ NEG_INF = -1e30
 
 
 class KVCache(NamedTuple):
+    """Decode KV cache. ``pos`` comes in two layouts:
+
+    * ``()`` scalar — all rows share one write position (static batching:
+      every request prefilled together, advancing in lockstep);
+    * ``(B,)`` vector — per-slot positions (continuous batching:
+      each batch row is an independent decode slot, re-fillable
+      mid-flight; row r writes at ``pos[r]`` and attends over its own
+      ``pos[r] + s`` valid entries only).
+
+    Both advance by ``s`` per call; every cache op below branches on
+    ``pos.ndim`` so the two layouts share one code path.
+    """
+
     k: jax.Array          # GQA: (B, S, Hkv, Dh) | MLA: (B, S, kv_lora)
     v: jax.Array          # GQA: (B, S, Hkv, Dh) | MLA: (B, S, d_rope)
-    pos: jax.Array        # () int32 — tokens already in cache
+    pos: jax.Array        # () | (B,) int32 — tokens already in cache
+
+
+def _cache_positions(pos: jax.Array, s: int) -> jax.Array:
+    """Absolute positions of this call's ``s`` new tokens: (1, s) for a
+    scalar ``pos`` (shared), (B, s) for per-slot ``pos``."""
+    base = jnp.arange(s)[None, :].astype(jnp.int32)
+    return pos[:, None] + base if pos.ndim == 1 else pos + base
+
+
+def _cache_update(buf: jax.Array, new: jax.Array, pos: jax.Array
+                  ) -> jax.Array:
+    """Write ``new`` (B, s, ...) into ``buf`` (B, S, ...) at ``pos``.
+
+    Scalar ``pos``: one dynamic slice shared by all rows. Per-slot
+    ``(B,)`` pos: a batched scatter — row r lands at ``pos[r]``; writes
+    past S drop (``mode='drop'``), so an over-budget row is safely inert
+    rather than wrapping around."""
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, 1)
+    b, s = new.shape[:2]
+    b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    t_idx = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    return buf.at[b_idx, t_idx].set(new, mode="drop")
+
+
+def _cache_valid(pos: jax.Array, s: int, s_max: int) -> jax.Array:
+    """Validity mask over the cache axis after this call's ``s`` writes:
+    (S,) for scalar ``pos``, (B, S) per-slot."""
+    idx = jnp.arange(s_max)
+    if pos.ndim == 0:
+        return idx < (pos + s)
+    return idx[None, :] < (pos[:, None] + s)
 
 
 # =============================================================== GQA ======
@@ -58,8 +103,9 @@ def _sdpa(q, k, v, *, causal: bool, q_pos=None, kv_valid=None):
         mask = qp[:, None] >= jnp.arange(sk)[None, :]
         scores = jnp.where(mask[None, None, None], scores, NEG_INF)
     if kv_valid is not None:                      # decode: mask empty slots
-        scores = jnp.where(kv_valid[None, None, None, None, :], scores,
-                           NEG_INF)
+        kvm = (kv_valid[:, None, None, None, :] if kv_valid.ndim == 2
+               else kv_valid[None, None, None, None, :])
+        scores = jnp.where(kvm, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrst,btgd->bsgrd", probs, vf)
     return out.reshape(b, sq, h, dh).astype(q.dtype)
@@ -74,8 +120,8 @@ def gqa_apply(p, x, cfg: ModelConfig, *, causal=True, positions=None,
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
     if positions is None:
-        base = jnp.arange(s)[None, :].astype(jnp.int32)
-        positions = base if cache is None else cache.pos + base
+        positions = (jnp.arange(s)[None, :].astype(jnp.int32) if cache is None
+                     else _cache_positions(cache.pos, s))
     q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
     src = x if kv_input is None else kv_input
     k = (src @ p["wk"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
@@ -86,10 +132,10 @@ def gqa_apply(p, x, cfg: ModelConfig, *, causal=True, positions=None,
 
     new_cache = None
     if cache is not None:
-        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k, cache.pos, 1)
-        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v, cache.pos, 1)
+        k_all = _cache_update(cache.k, k, cache.pos)
+        v_all = _cache_update(cache.v, v, cache.pos)
         new_cache = KVCache(k_all, v_all, cache.pos + s)
-        kv_valid = jnp.arange(k_all.shape[1]) < (cache.pos + s)
+        kv_valid = _cache_valid(cache.pos, s, k_all.shape[1])
         out = _sdpa(q, k_all, v_all, causal=False, kv_valid=kv_valid)
     else:
         out = _sdpa(q, k, v, causal=causal and kv_input is None)
@@ -125,8 +171,8 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions=None,
     b, s, d = x.shape
     h = cfg.n_heads
     if positions is None:
-        base = jnp.arange(s)[None, :].astype(jnp.int32)
-        positions = base if cache is None else cache.pos + base
+        positions = (jnp.arange(s)[None, :].astype(jnp.int32) if cache is None
+                     else _cache_positions(cache.pos, s))
 
     q = (x @ p["wq"]).reshape(b, s, h, m.d_nope + m.d_rope)
     q_nope, q_rope = q[..., :m.d_nope], q[..., m.d_nope:]
@@ -139,12 +185,10 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions=None,
     kv_valid = None
     new_cache = None
     if cache is not None:
-        c_all = jax.lax.dynamic_update_slice_in_dim(cache.k, c_kv,
-                                                    cache.pos, 1)
-        r_all = jax.lax.dynamic_update_slice_in_dim(cache.v, k_rope,
-                                                    cache.pos, 1)
+        c_all = _cache_update(cache.k, c_kv, cache.pos)
+        r_all = _cache_update(cache.v, k_rope, cache.pos)
         new_cache = KVCache(c_all, r_all, cache.pos + s)
-        kv_valid = jnp.arange(c_all.shape[1]) < (cache.pos + s)
+        kv_valid = _cache_valid(cache.pos, s, c_all.shape[1])
         c_kv, k_rope = c_all, r_all
 
     kv = (c_kv @ p["w_ukv"]).reshape(b, c_kv.shape[1], h, m.d_nope + m.d_v)
@@ -161,7 +205,9 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions=None,
         mask = positions[:, :, None] >= jnp.arange(sk)[None, None, :]
         scores = jnp.where(mask[:, None], scores, NEG_INF)
     else:
-        scores = jnp.where(kv_valid[None, None, None, :], scores, NEG_INF)
+        kvm = (kv_valid[:, None, None, :] if kv_valid.ndim == 2
+               else kv_valid[None, None, None, :])
+        scores = jnp.where(kvm, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
     out = out.reshape(b, s, -1).astype(x.dtype)

@@ -270,6 +270,59 @@ def init_serve_state(params, cfg: ModelConfig, batch: int, max_len: int, *,
                       jnp.zeros((), jnp.int32))
 
 
+def per_slot_state(state: ServeState, batch: int) -> ServeState:
+    """Switch a fresh serve state to per-slot cache positions.
+
+    Replaces every scalar position with its ``(B,)`` vector layout
+    (``attention.KVCache.pos``) so each batch row advances independently —
+    the state layout continuous batching decodes against
+    (``repro.serve.engine.Engine.serve``): a freed row's position is reset
+    to 0 and the row re-fills with a new request while the other rows keep
+    decoding. ``decode_step`` is layout-agnostic (the cache ops branch on
+    ``pos.ndim``), so the same compiled step serves both layouts — one
+    retrace, no new code path.
+
+    Only attention-family caches position independent rows this way; SSM
+    recurrences and the hybrid shared block carry no positional cache
+    (their state is per-row already, but the engine's prefill contract
+    differs), and audio holds a per-request encoder output — those
+    families keep the static engine path.
+    """
+    if not isinstance(state.layer_caches, A.KVCache):
+        raise ValueError(
+            "per-slot positions need attention KV caches; family with "
+            f"caches {type(state.layer_caches).__name__} is served "
+            "statically")
+    if state.enc_out is not None or state.shared_cache is not None:
+        raise ValueError("per-slot positions: audio/hybrid states are "
+                         "served statically")
+    n_layers = state.layer_caches.pos.shape[0]
+    return ServeState(
+        state.layer_caches._replace(
+            pos=jnp.zeros((n_layers, batch), jnp.int32)),
+        state.shared_cache, state.enc_out,
+        jnp.zeros((batch,), jnp.int32))
+
+
+def reset_slots(state: ServeState, free: jax.Array) -> ServeState:
+    """Zero the cache positions of the rows selected by ``free`` (B,) bool.
+
+    The admission reset for continuous batching: a re-filled slot starts
+    writing at position 0 again. Stale K/V content above the reset
+    position needs no clearing — the validity mask derived from ``pos``
+    (``attention._cache_valid``) already hides it. Requires a per-slot
+    state (:func:`per_slot_state`).
+    """
+    caches = state.layer_caches
+    if caches.pos.ndim != 2:
+        raise ValueError("reset_slots needs a per-slot state "
+                         "(see per_slot_state)")
+    return ServeState(
+        caches._replace(pos=jnp.where(free[None, :], 0, caches.pos)),
+        state.shared_cache, state.enc_out,
+        jnp.where(free, 0, state.pos))
+
+
 def decode_step(params, cfg: ModelConfig, state: ServeState,
                 tokens: jax.Array) -> Tuple[jax.Array, ServeState]:
     """One decode step. tokens (B, 1) -> logits (B, V), new state."""

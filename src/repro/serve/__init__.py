@@ -1,6 +1,33 @@
 """repro.serve subpackage: slot-based serving engines (DESIGN.md §5).
 
 * :mod:`repro.serve.slots` — generic slot pool / admission machinery.
-* :mod:`repro.serve.engine` — LM engine (prefill + cached decode).
-* :mod:`repro.serve.tnn_engine` — TNN volley engine (continuous batching).
+  State lives in the slot: each :class:`SlotEntry` carries its request's
+  typed per-slot state from ``on_admit`` through :meth:`SlotPool.retire`.
+* :mod:`repro.serve.engine` — LM engine (prefill + cached decode,
+  continuous batching over per-slot KV-cache positions).
+* :mod:`repro.serve.tnn_engine` — TNN volley engine (continuous batching;
+  recurrent streams keep their carry in the slot).
 """
+
+from repro.serve.engine import Engine, LMRequest, ServeConfig
+from repro.serve.slots import QueueFull, SlotEntry, SlotPool, latency_summary
+from repro.serve.tnn_engine import (
+    AsyncTNNEngine,
+    TNNEngine,
+    TNNRequest,
+    TNNServeConfig,
+)
+
+__all__ = [
+    "AsyncTNNEngine",
+    "Engine",
+    "LMRequest",
+    "QueueFull",
+    "ServeConfig",
+    "SlotEntry",
+    "SlotPool",
+    "TNNEngine",
+    "TNNRequest",
+    "TNNServeConfig",
+    "latency_summary",
+]

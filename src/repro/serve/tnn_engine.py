@@ -6,12 +6,25 @@ spike volleys (``core/coding.py``: ``value_to_time`` / ``grf_encode``), one
 volley per gamma cycle. Requests are admitted into a fixed pool of B slots
 (:class:`repro.serve.slots.SlotPool`); each engine step stacks the live slots'
 next volleys into the ``(B, n_inputs)`` batch that ``TNNLayer``/``TNNNetwork``
-already vectorize over, runs one jit-compiled ``network_forward`` — every
+already vectorize over, runs one jit-compiled ``network.forward`` — every
 neuron evaluated through the backend-dispatched ``fire_times_bank`` (scan /
 closed_form / event / pallas / auto) — and scatters the ``(B, C, Q)`` output
 spike times back to the slots. A request retires the moment its stream is
 exhausted; its slot re-fills from the pending queue at the top of the next
 step. No barrier on the slowest request.
+
+Stateful streams live IN their slots (DESIGN.md §5.1): when the network has
+recurrent layers, each slot's :class:`~repro.serve.slots.SlotEntry` ``state``
+holds that stream's per-layer recurrent carry — initialised all-silent by the
+pool's ``on_admit`` hook, gathered into per-layer ``(B, n_outputs)`` carry
+batches each step (free rows stay silent, i.e. inert), threaded through
+``network.forward(..., carry=...)``, and scattered back after the cycle. Two
+streams sharing a batch never see each other's state — row r's carry is
+row r's previous output, so slot outputs stay bit-exact against an unbatched
+per-stream reference regardless of batch composition or mid-flight refill
+churn. ``retire`` hands the final carry back on the entry
+(``TNNRequest.final_state``), so a stream can be resubmitted later to
+continue where it left off.
 
 With ``backend="auto"`` the engine measures each batch's spike density
 host-side (before the jit boundary) and re-resolves the neuron-bank engine
@@ -32,7 +45,7 @@ All engines are bit-exact, so the policy is invisible in the outputs;
 Empty slots carry all-``NO_SPIKE`` volleys: silent lines never fire a neuron,
 so padding rows are inert, and the batch shape stays static — one XLA
 compilation per (B, network) pair. Everything is int32 end to end, so engine
-outputs are bit-exact against unbatched per-request ``network_forward`` calls
+outputs are bit-exact against unbatched per-request ``network.forward`` calls
 regardless of batch composition (pinned by tests/test_serve_tnn.py).
 
 Front doors:
@@ -51,16 +64,17 @@ import collections
 import contextlib
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core import coding, compaction, network, neuron
 from repro.serve import slots
 from repro.sharding import compat
+from repro.sharding import specs as sharding_specs
 
 #: neuron-bank engines that consume a static compaction width under jit
 SPARSE_ENGINES = ("event", "pallas_compact")
@@ -82,9 +96,9 @@ class TNNServeConfig:
     #: engines are bit-exact, so the policy never changes outputs.
     backend: neuron.Backend = "auto"
     #: gamma-cycle pipeline micro-batches per step (DESIGN.md §5.4): 1 =
-    #: the barriered ``network_forward``; M > 1 streams the slot batch
+    #: the barriered schedule; M > 1 streams the slot batch
     #: through the layer stack in M micro-batches
-    #: (``network.network_forward_pipelined``) so layer l works micro-batch
+    #: (``network.forward(..., microbatches=M)``) so layer l works micro-batch
     #: t while layer l+1 works micro-batch t-1. Bit-exact for every
     #: backend; the density/width measurements stay host-side, taken per
     #: micro-batch (``stats()`` reports per-stage means).
@@ -98,6 +112,18 @@ class TNNServeConfig:
     #: ``stats()['jit_evictions']`` counts drops). The default compiled
     #: step (``_fwd``) is pinned and never counts against the cap.
     max_jit_variants: int = 8
+    #: admission control: cap on the pending queue (None = unbounded).
+    #: With a cap set, ``submit`` raises
+    #: :class:`repro.serve.slots.QueueFull` once the queue holds this many
+    #: waiting requests — the burst is rejected explicitly instead of
+    #: growing queue latency without bound; rejections are counted in
+    #: ``stats()['n_rejected']``.
+    max_pending: Optional[int] = None
+
+
+#: a slot's persistent memory: per-layer recurrent carries, ``None`` entries
+#: for feedforward layers (the SlotEntry ``state`` payload — DESIGN.md §5.1)
+CarryState = Tuple[Optional[np.ndarray], ...]
 
 
 @dataclasses.dataclass
@@ -113,6 +139,14 @@ class TNNRequest:
     density: float = 0.0
     #: engines the auto policy actually served this request's cycles with
     backends: set = dataclasses.field(default_factory=set)
+    #: carry to seed the slot with at admission (stream continuation);
+    #: None = fresh all-silent state (``TNNEngine.submit(initial_state=)``)
+    initial_state: Optional[CarryState] = None
+    #: final per-layer recurrent carries, handed back at retirement (None
+    #: until the stream retires, and stays None for feedforward networks);
+    #: resubmitting a continuation stream with these as ``initial_state``
+    #: continues the stream bit-exactly where it left off
+    final_state: Optional[CarryState] = None
 
     @property
     def n_cycles(self) -> int:
@@ -135,7 +169,8 @@ class TNNEngine:
     1. ``admit``: free slots re-fill FIFO from the pending queue.
     2. ``batch``: live slots contribute their next volley; empty rows are
        all-``NO_SPIKE`` (inert).
-    3. ``fire``: one jit ``network_forward`` over ``(B, n_inputs)``.
+    3. ``fire``: one jit ``network.forward`` over ``(B, n_inputs)``
+       threading the live slots' recurrent carries.
     4. ``retire``: exhausted requests leave their slots immediately.
     """
 
@@ -168,16 +203,37 @@ class TNNEngine:
                 network.param_shardings(net, mesh),
             )
             self._batch_sharding = network.data_sharding(net, mesh, scfg.n_slots)
+            # recurrent-carry placement: each (B, n_outputs_l) carry batch
+            # lands batch-over-data, lines-over-column — the same shards
+            # that produced (and will re-consume) those lines, so carry
+            # threading moves no data between devices (specs.tnn_carry_pspec)
+            self._carry_shardings = tuple(
+                NamedSharding(
+                    mesh,
+                    sharding_specs.tnn_carry_pspec(mesh, scfg.n_slots, lc.n_outputs),
+                )
+                if lc.recurrent
+                else None
+                for lc in net.layers
+            )
         else:
             self.params = tuple(jnp.asarray(p) for p in params)
             self._batch_sharding = None
-        self.pool: slots.SlotPool[TNNRequest] = slots.SlotPool(scfg.n_slots)
+            self._carry_shardings = (None,) * len(net.layers)
+        #: which layers thread a recurrent carry (slot state is live iff any)
+        self._recurrent = tuple(lc.recurrent for lc in net.layers)
+        self.stateful = any(self._recurrent)
+        self.pool: slots.SlotPool[TNNRequest, CarryState] = slots.SlotPool(
+            scfg.n_slots,
+            on_admit=self._on_admit,
+            max_pending=scfg.max_pending,
+        )
         if scfg.pipeline_microbatches < 1:
             raise ValueError(
                 f"pipeline_microbatches must be >= 1, got {scfg.pipeline_microbatches}"
             )
         # effective micro-batch split — network.microbatch_split is the
-        # single encoding, shared with network_forward_pipelined, so the
+        # single encoding, shared with network.forward, so the
         # host-side _stage_rows (per-stage density measurement) can never
         # disagree with the compiled pipeline schedule
         self.n_stages, rows = network.microbatch_split(
@@ -224,14 +280,38 @@ class TNNEngine:
         self._backend_steps: Dict[str, int] = {}
 
     def _forward_fn(self, net: network.TNNNetwork):
-        """Step function over a (possibly engine-pinned) network: the
-        barriered ``network_forward``, or the §5.4 pipelined schedule when
-        the engine runs with ``pipeline_microbatches > 1`` — bit-exact
-        either way, so every jit variant (``_fwd_for``) shares it."""
-        if self.n_stages > 1:
-            m = self.n_stages
-            return lambda p, v: network.network_forward_pipelined(p, v, net, m)[0]
-        return lambda p, v: network.network_forward(p, v, net)[0]
+        """Step function over a (possibly engine-pinned) network:
+        ``network.forward`` with the engine's micro-batch count — the
+        barriered schedule at M=1, the §5.4 pipelined schedule above it,
+        bit-exact either way, so every jit variant (``_fwd_for``) shares
+        it. Signature ``(params, volleys, carry) -> (out, carry_out)``;
+        the carry tuple's ``None`` entries (feedforward layers, or every
+        layer in a stateless network) vanish from the jit pytree, so a
+        feedforward engine compiles the exact same step it always did."""
+        m = self.n_stages
+
+        def fn(p, v, c):
+            res = network.forward(p, v, net, microbatches=m, carry=c)
+            return res.out, res.carry
+
+        return fn
+
+    def _on_admit(self, idx: int, entry: slots.SlotEntry) -> None:
+        """Pool lifecycle hook: initialise the slot's per-layer recurrent
+        state all-silent (NO_SPIKE) — cycle 0 of a fresh stream is exactly
+        feedforward. A submitted request carrying an ``initial_state``
+        resumes from that carry instead (stream continuation)."""
+        del idx
+        req = entry.item
+        if req is not None and req.initial_state is not None:
+            # continuation: the request was seeded with a prior carry
+            entry.state = req.initial_state
+            return
+        if self.stateful:
+            entry.state = tuple(
+                np.full((lc.n_outputs,), NO_SPIKE, np.int32) if lc.recurrent else None
+                for lc in self.net.layers
+            )
 
     def reset_stats(self) -> None:
         """Zero the throughput/latency accounting (e.g. after jit warmup);
@@ -244,11 +324,22 @@ class TNNEngine:
         self._stage_density_sums = [0.0] * self.n_stages
         self._backend_steps = {}
         self.pool.n_retired = 0
+        self.pool.n_rejected = 0
         self.pool.n_submitted = self.pool.n_live + self.pool.n_pending
 
-    def submit(self, volleys: np.ndarray) -> TNNRequest:
+    def submit(
+        self,
+        volleys: np.ndarray,
+        initial_state: Optional[CarryState] = None,
+    ) -> TNNRequest:
         """Enqueue one request: ``(n_cycles, n_inputs)`` int32 spike times
-        (a single ``(n_inputs,)`` volley is promoted to one cycle)."""
+        (a single ``(n_inputs,)`` volley is promoted to one cycle).
+
+        ``initial_state`` seeds the slot's recurrent carry at admission —
+        pass a retired request's ``final_state`` to continue its stream
+        bit-exactly. Raises :class:`repro.serve.slots.QueueFull` when the
+        engine runs with ``max_pending`` and the queue is full (counted in
+        ``stats()['n_rejected']``)."""
         volleys = np.asarray(volleys, np.int32)
         if volleys.ndim == 1:
             volleys = volleys[None, :]
@@ -267,10 +358,29 @@ class TNNEngine:
                 f"(NO_SPIKE={NO_SPIKE} for silent lines); got min "
                 f"{int(volleys.min())}"
             )
+        if initial_state is not None:
+            if not self.stateful:
+                raise ValueError("initial_state given for a feedforward network")
+            if len(initial_state) != len(self.net.layers):
+                raise ValueError(
+                    f"initial_state has {len(initial_state)} entries for "
+                    f"{len(self.net.layers)} layers"
+                )
+            initial_state = tuple(
+                None if c is None else np.asarray(c, np.int32).reshape(lc.n_outputs)
+                for c, lc in zip(initial_state, self.net.layers)
+            )
         density = float(np.mean(volleys < self._t_steps))
-        req = TNNRequest(req_id=self._next_id, volleys=volleys, density=density)
-        self._next_id += 1
+        req = TNNRequest(
+            req_id=self._next_id,
+            volleys=volleys,
+            density=density,
+            initial_state=initial_state,
+        )
+        # pool.submit may reject (QueueFull); only a queued request
+        # consumes a request id
         self.pool.submit(req)
+        self._next_id += 1
         return req
 
     def _mesh_scope(self):
@@ -287,6 +397,16 @@ class TNNEngine:
             return jnp.asarray(batch)
         return jax.device_put(batch, self._batch_sharding)
 
+    def _place_carry(self, carry_np: CarryState):
+        """Per-layer host carry batches -> device(s), under the §6.5 carry
+        rule when a mesh is active (``None`` entries pass through)."""
+        return tuple(
+            None
+            if c is None
+            else (jnp.asarray(c) if sh is None else jax.device_put(c, sh))
+            for c, sh in zip(carry_np, self._carry_shardings)
+        )
+
     def _layer0_width(self, batch: np.ndarray) -> int:
         """Bucketed max active-line count over the batch's layer-0
         receptive fields — the static compaction width a sparse-engine
@@ -296,7 +416,7 @@ class TNNEngine:
         return compaction.bucket_width(s)
 
     def _fwd_for(self, engine: str, first_width: Optional[int] = None):
-        """jit ``network_forward`` for a density-resolved engine.
+        """jit ``network.forward`` step for a density-resolved engine.
 
         The default resolution uses the compiled ``self._fwd``; any other
         resolution lazily compiles a variant with the network's
@@ -348,9 +468,22 @@ class TNNEngine:
         if not live:
             return []
         batch = np.full((self.scfg.n_slots, self.net.n_inputs), NO_SPIKE, np.int32)
+        # per-layer recurrent carry batches from the live slots' state;
+        # free rows stay all-NO_SPIKE (silent carries are inert, like
+        # their input rows), so the batch stays shape-static
+        carry_np: CarryState = tuple(
+            np.full((self.scfg.n_slots, lc.n_outputs), NO_SPIKE, np.int32)
+            if lc.recurrent
+            else None
+            for lc in self.net.layers
+        )
         for idx, entry in live:
             req = entry.item
             batch[idx] = req.volleys[req.cursor]
+            if self.stateful:
+                for c, s in zip(carry_np, entry.state):
+                    if c is not None:
+                        c[idx] = s
         # measured batch density (host-side — the jit boundary can't see
         # it): NO_SPIKE-padded free slots count as silent lines, which is
         # precisely why partially-filled batches resolve to the event path.
@@ -380,7 +513,13 @@ class TNNEngine:
             # measured from this batch's own receptive-field view (exact,
             # never drops)
             width = self._layer0_width(batch) if engine in SPARSE_ENGINES else None
-            out = np.asarray(self._fwd_for(engine, width)(self.params, self._place(batch)))
+            out_dev, carry_dev = self._fwd_for(engine, width)(
+                self.params, self._place(batch), self._place_carry(carry_np)
+            )
+            out = np.asarray(out_dev)
+            carry_out = tuple(
+                None if c is None else np.asarray(c) for c in carry_dev
+            )
         retired: List[TNNRequest] = []
         for idx, entry in live:
             req = entry.item
@@ -389,12 +528,22 @@ class TNNEngine:
             # batch array for the life of the request
             req.outputs.append(out[idx].copy())
             req.cursor += 1
+            if self.stateful:
+                # scatter this row's new carry back into the slot's state
+                entry.state = tuple(
+                    None if c is None else c[idx].copy() for c in carry_out
+                )
             if req.done:
                 done_entry = self.pool.retire(idx)
+                # the final carry leaves the pool on the entry; hand it to
+                # the request so the client can continue the stream later
+                req.final_state = done_entry.state
                 # keep only the timestamps for the latency summary — holding
-                # the request (volleys + outputs) would grow without bound
-                # in a long-lived service
-                self._retired.append(dataclasses.replace(done_entry, item=None))
+                # the request (volleys + outputs + state) would grow without
+                # bound in a long-lived service
+                self._retired.append(
+                    dataclasses.replace(done_entry, item=None, state=None)
+                )
                 retired.append(req)
         self.n_steps += 1
         self.n_volleys += len(live)
@@ -420,6 +569,7 @@ class TNNEngine:
             "n_steps": float(self.n_steps),
             "n_volleys": float(self.n_volleys),
             "n_retired": float(self.pool.n_retired),
+            "n_rejected": float(self.pool.n_rejected),
             "run_s": self._run_s,
         }
         if self._run_s > 0.0:
@@ -494,13 +644,17 @@ def reference_outputs(
     net: network.TNNNetwork,
     stream: np.ndarray,
 ) -> np.ndarray:
-    """Unbatched oracle: each volley through ``network_forward`` alone.
+    """Unbatched oracle: each volley through ``network.forward`` alone,
+    threading the stream's own recurrent carry across cycles (silent for
+    cycle 0 — a fresh stream).
 
     The bit-exactness target for the slot engine (and the honest
     per-request baseline for the serving benchmark).
     """
     outs: List[np.ndarray] = []
+    carry = None
     for volley in np.asarray(stream, np.int32):
-        out, _ = network.network_forward(tuple(params), jnp.asarray(volley), net)
-        outs.append(np.asarray(out))
+        res = network.forward(tuple(params), jnp.asarray(volley), net, carry=carry)
+        carry = res.carry
+        outs.append(np.asarray(res.out))
     return np.stack(outs, axis=0)

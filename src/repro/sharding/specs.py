@@ -340,3 +340,22 @@ def tnn_stage_pspec(mesh: Mesh, batch: int, n_lines: int) -> P:
     dp, col = tnn_stage_axes()
     return P(_fit(mesh, batch, dp_axes(mesh)),
              _fit(mesh, n_lines, col))
+
+
+def tnn_carry_axes() -> tuple:
+    """``maybe_wsc`` axis entries for a recurrent carry ``(B, n_outputs)``
+    (DESIGN.md §6.5): batch over the DP group, the flattened ``C * Q``
+    previous-cycle output lines over ``column``. Deliberately the same
+    rule as a pipeline stage buffer — a carry IS last cycle's output
+    volley, so its lines already live on the column shards of the layer
+    that produced (and will re-consume) them; threading state across
+    gamma cycles moves no data between shards."""
+    return tnn_stage_axes()
+
+
+def tnn_carry_pspec(mesh: Mesh, batch: int, n_outputs: int) -> P:
+    """Host-to-shard placement for a recurrent carry ``(B, n_outputs)`` —
+    the externally-placed twin of :func:`tnn_carry_axes` (same rule,
+    ``_fit`` fallback per dim); what the serve engine uses to place each
+    slot's carry rows next to the layer weights that consume them."""
+    return tnn_stage_pspec(mesh, batch, n_outputs)

@@ -217,7 +217,8 @@ def test_network_forward_feeds_wta_times_forward():
     net = network.make_network([l1, l2])
     params = network.init_network(jax.random.PRNGKey(0), net)
     volleys = _rand_volleys(jax.random.PRNGKey(1), (6, net.n_inputs), 12)
-    out, winners = network.network_forward(params, volleys, net)
+    res = network.forward(params, volleys, net)
+    out, winners = res.out, res.winners
     # layer 2 must see exactly layer 1's flattened WTA output
     out1, _ = layer.layer_forward(params[0], volleys, l1)
     out2, _ = layer.layer_forward(params[1], out1.reshape(6, 8), l2)

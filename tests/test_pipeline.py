@@ -1,5 +1,5 @@
 """Gamma-cycle pipelined forward (DESIGN.md §5.4): bit-exactness of
-``network_forward_pipelined`` vs the barriered ``network_forward``.
+``network.forward(..., microbatches=M)`` vs the barriered M=1 schedule.
 
 The pipeline schedule (M micro-batches streamed through the layer stack,
 NO_SPIKE-padded warmup/drain ticks) is a pure re-ordering of layer-local
@@ -44,14 +44,13 @@ def _stack(depth=3, backend="scan", n_col=4, rf=4, q=4, t_steps=12):
 
 
 def _assert_pipelined_matches(params, v, net, microbatches, jit=False):
-    ref, ref_win = network.network_forward(params, v, net)
+    ref_res = network.forward(params, v, net)
+    ref, ref_win = ref_res.out, ref_res.winners
+    fn = lambda p, x: network.forward(p, x, net, microbatches=microbatches)
     if jit:
-        fn = jax.jit(lambda p, x: network.network_forward_pipelined(
-            p, x, net, microbatches))
-    else:
-        fn = lambda p, x: network.network_forward_pipelined(  # noqa: E731
-            p, x, net, microbatches)
-    out, win = fn(params, v)
+        fn = jax.jit(fn)
+    res = fn(params, v)
+    out, win = res.out, res.winners
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     assert len(win) == len(ref_win)
     for got, want in zip(win, ref_win):
@@ -85,15 +84,17 @@ def test_pipelined_single_volley_and_batch_of_one():
     params = network.init_network(jax.random.PRNGKey(2), net)
     v1 = jnp.asarray(_sparse_volleys(11, 1, net.n_inputs))
     _assert_pipelined_matches(params, v1, net, 4)          # B=1, M clamps
-    ref, ref_win = network.network_forward(params, v1[0], net)
-    out, win = network.network_forward_pipelined(params, v1[0], net, 4)
+    rres = network.forward(params, v1[0], net)
+    ref, ref_win = rres.out, rres.winners
+    pres = network.forward(params, v1[0], net, microbatches=4)
+    out, win = pres.out, pres.winners
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     for got, want in zip(win, ref_win):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_pipelined_empty_batch_matches_barriered():
-    """B=0 streams nothing and must mirror network_forward's empties."""
+    """B=0 streams nothing and must mirror the barriered path's empties."""
     net = _stack(depth=2)
     params = network.init_network(jax.random.PRNGKey(6), net)
     v = jnp.zeros((0, net.n_inputs), jnp.int32)

@@ -238,7 +238,7 @@ def test_memmap_corpus_roundtrip(tmp_path):
 
 # ------------------------------------------------------------- serving
 def test_engine_generates_batched():
-    from repro.serve.engine import Engine, ServeConfig
+    from repro.serve import Engine, ServeConfig
     cfg = _tiny_cfg()
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(params, cfg, ServeConfig(max_len=64))
@@ -250,7 +250,7 @@ def test_engine_generates_batched():
 
 
 def test_engine_greedy_is_deterministic():
-    from repro.serve.engine import Engine, ServeConfig
+    from repro.serve import Engine, ServeConfig
     cfg = _tiny_cfg()
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(params, cfg, ServeConfig(max_len=64, temperature=0.0))

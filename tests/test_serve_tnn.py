@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import coding, layer, network
 from repro.serve import tnn_engine
-from repro.serve.slots import SlotPool, latency_summary
+from repro.serve import SlotPool, latency_summary
 
 NO_SPIKE = int(coding.NO_SPIKE)
 
@@ -206,7 +206,7 @@ def test_async_pump_failure_rejects_waiting_clients():
     eng = tnn_engine.TNNEngine(
         _params(net), net, tnn_engine.TNNServeConfig(n_slots=2,
                                                      backend="closed_form"))
-    eng._fwd = lambda p, v: (_ for _ in ()).throw(RuntimeError("boom"))
+    eng._fwd = lambda p, v, c: (_ for _ in ()).throw(RuntimeError("boom"))
     aeng = tnn_engine.AsyncTNNEngine(eng)
 
     async def client():

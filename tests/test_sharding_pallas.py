@@ -88,7 +88,7 @@ def test_use_interpret_explicit_override(monkeypatch):
 
 
 def test_sharded_pallas_network_bit_exact_property():
-    """network_forward with pallas/pallas_compact layers on the (2, 4)
+    """network.forward with pallas/pallas_compact layers on the (2, 4)
     mesh == the single-device scan reference, over random sparse draws
     plus the all-silent and fully-dense edges; the ragged C=5 net takes
     the replication fallback and must agree too."""
@@ -109,14 +109,14 @@ def test_sharded_pallas_network_bit_exact_property():
                      for lc in cfg0.layers])
                 sp = jax.device_put(ps, network.param_shardings(bnet, mesh))
                 for volleys in draws:
-                    ref, ref_win = network.network_forward(ps, volleys,
-                                                           snet)
-                    ref = np.asarray(ref)
+                    rres = network.forward(ps, volleys, snet)
+                    ref, ref_win = np.asarray(rres.out), rres.winners
                     with compat.set_mesh(mesh):
                         vs = jax.device_put(
                             volleys, network.data_sharding(bnet, mesh,
                                                            volleys.shape[0]))
-                        out, win = network.network_forward(sp, vs, bnet)
+                        sres = network.forward(sp, vs, bnet)
+                        out, win = sres.out, sres.winners
                     np.testing.assert_array_equal(np.asarray(out), ref)
                     for w_ref, w_sh in zip(ref_win, win):
                         np.testing.assert_array_equal(np.asarray(w_sh),
@@ -231,7 +231,7 @@ def test_maybe_wsc_layouts_on_host_mesh():
     replication — the values are identical either way — so this pins
     the resolved PartitionSpecs themselves: the jitted constraint
     output must land on P('column','data'), the ragged C=5 shape must
-    degrade only its column dim, and a pallas-backed network_forward
+    degrade only its column dim, and a pallas-backed network.forward
     must keep its outputs tiled over the column axis end to end."""
     print(_run("""
         from jax.sharding import PartitionSpec as P
@@ -253,7 +253,7 @@ def test_maybe_wsc_layouts_on_host_mesh():
         with compat.set_mesh(mesh):
             vs = jax.device_put(v, network.data_sharding(bnet, mesh,
                                                          v.shape[0]))
-            fwd = jax.jit(lambda p, x: network.network_forward(p, x, bnet))
+            fwd = jax.jit(lambda p, x: network.forward(p, x, bnet)[:2])
             out, win = fwd(sp, vs)
         assert out.sharding.spec == P('data', 'column'), out.sharding.spec
         for w in win:
@@ -263,13 +263,14 @@ def test_maybe_wsc_layouts_on_host_mesh():
 
 
 def test_sharded_pipelined_pallas_bit_exact():
-    """network_forward_pipelined composes with the shard_map Pallas path:
+    """network.forward(..., microbatches=M) composes with the shard_map
+    Pallas path:
     the §5.4 schedule over pallas (and width-pinned pallas_compact)
     layers on the (2, 4) mesh matches the single-device barriered scan
     reference for ragged and degenerate micro-batch splits."""
     print(_run("""
-        ref, ref_win = network.network_forward(params, v, net)
-        ref = np.asarray(ref)
+        rres = network.forward(params, v, net)
+        ref, ref_win = np.asarray(rres.out), rres.winners
         widths = network.sparse_widths(
             net, compaction.bucket_width(
                 compaction.max_active(v[:, np.asarray(l1.rf_index())],
@@ -286,7 +287,7 @@ def test_sharded_pipelined_pallas_bit_exact():
             sp = jax.device_put(params, network.param_shardings(bnet, mesh))
             for m in (1, 3, 8):
                 fwd = jax.jit(lambda p, x, n=bnet, m=m:
-                              network.network_forward_pipelined(p, x, n, m))
+                              network.forward(p, x, n, microbatches=m)[:2])
                 with compat.set_mesh(mesh):
                     vs = jax.device_put(
                         v, network.data_sharding(bnet, mesh, v.shape[0]))

@@ -59,7 +59,7 @@ def _run(code: str) -> str:
 
 
 def test_sharded_layer_and_network_bit_exact_all_backends():
-    """layer_forward + network_forward on a (2, 4) mesh == single device
+    """layer_forward + network.forward on a (2, 4) mesh == single device
     for every jnp engine, including the non-divisible column fallback."""
     print(_run("""
         for backend in ("scan", "closed_form", "event"):
@@ -69,7 +69,7 @@ def test_sharded_layer_and_network_bit_exact_all_backends():
                      for lc in cfg0.layers])
                 sp = jax.device_put(ps, network.param_shardings(bnet, mesh))
                 fwd = jax.jit(
-                    lambda p, x, n=bnet: network.network_forward(p, x, n))
+                    lambda p, x, n=bnet: network.forward(p, x, n)[:2])
                 # property-style: several random draws, incl. an all-silent
                 # and a fully-dense volley batch (padding/no-WTA edges)
                 draws = [sparse_volleys(np.random.default_rng(s), 8,
@@ -79,9 +79,8 @@ def test_sharded_layer_and_network_bit_exact_all_backends():
                     np.random.default_rng(7).integers(
                         0, 12, size=(8, cfg0.n_inputs)), np.int32))
                 for volleys in draws:
-                    ref, ref_win = network.network_forward(ps, volleys,
-                                                           bnet)
-                    ref = np.asarray(ref)
+                    rres = network.forward(ps, volleys, bnet)
+                    ref, ref_win = np.asarray(rres.out), rres.winners
                     with compat.set_mesh(mesh):
                         vs = jax.device_put(
                             volleys, network.data_sharding(bnet, mesh,
@@ -207,7 +206,8 @@ def test_pallas_mesh_capability_model():
 
 
 def test_sharded_pipelined_forward_bit_exact():
-    """network_forward_pipelined on the (2, 4) mesh == the single-device
+    """network.forward(..., microbatches=M) on the (2, 4) mesh == the
+    single-device
     barriered reference for every jnp engine and micro-batch split (incl.
     ragged 8 % 3 != 0 and M > B) — the §5.4 schedule composes with the
     §6.4/§6.5 placement without changing a spike time. Covers the jax
@@ -219,11 +219,11 @@ def test_sharded_pipelined_forward_bit_exact():
                 [dataclasses.replace(lc, backend=backend)
                  for lc in net.layers])
             sp = jax.device_put(params, network.param_shardings(bnet, mesh))
-            ref, ref_win = network.network_forward(params, v, bnet)
-            ref = np.asarray(ref)
+            rres = network.forward(params, v, bnet)
+            ref, ref_win = np.asarray(rres.out), rres.winners
             for m in (1, 2, 3, 8, 20):
                 fwd = jax.jit(lambda p, x, n=bnet, m=m:
-                              network.network_forward_pipelined(p, x, n, m))
+                              network.forward(p, x, n, microbatches=m)[:2])
                 with compat.set_mesh(mesh):
                     vs = jax.device_put(
                         v, network.data_sharding(bnet, mesh, v.shape[0]))
@@ -243,6 +243,62 @@ def test_sharded_pipelined_forward_bit_exact():
                 tnn_engine.reference_outputs(params, net, s), r)
         assert eng.stats()['pipeline_microbatches'] == 3.0
         print('SHARDED_PIPELINED_BIT_EXACT_OK')
+    """))
+
+
+def test_sharded_recurrent_carry_bit_exact():
+    """Recurrent carry threading on the (2, 4) mesh == the single-device
+    unrolled reference: the carry rides the same ('data',)/('column',)
+    stage placement (sharding.specs.tnn_carry_*), for the dividing C=8
+    stack AND the C=5 replication fallback, across multiple cycles and
+    composed with the pipelined schedule."""
+    print(_run("""
+        rl1 = dataclasses.replace(l1, recurrent=True)
+        rl2 = dataclasses.replace(l2, recurrent=True)
+        rnet = network.make_network([rl1, rl2])
+        rodd = network.make_network(
+            [dataclasses.replace(rl1, n_columns=5)])
+        for cfg0, key in ((rnet, 0), (rodd, 1)):
+            ps = network.init_network(jax.random.PRNGKey(key), cfg0)
+            seq = [sparse_volleys(np.random.default_rng(s), 8,
+                                  cfg0.n_inputs) for s in range(3)]
+            seq.append(np.full((8, cfg0.n_inputs), NS, np.int32))
+            # single-device reference: explicit multi-cycle carry thread
+            ref_outs, carry = [], None
+            for vol in seq:
+                res = network.forward(ps, jnp.asarray(vol), cfg0,
+                                      carry=carry)
+                ref_outs.append(np.asarray(res.out))
+                carry = res.carry
+            ref_carry = [np.asarray(c) for c in carry]
+            sp = jax.device_put(ps, network.param_shardings(cfg0, mesh))
+            for m in (1, 3):
+                carry_sh = None
+                with compat.set_mesh(mesh):
+                    for vol, want in zip(seq, ref_outs):
+                        vs = jax.device_put(
+                            vol, network.data_sharding(cfg0, mesh,
+                                                       vol.shape[0]))
+                        res = network.forward(sp, vs, cfg0,
+                                              carry=carry_sh,
+                                              microbatches=m)
+                        np.testing.assert_array_equal(
+                            np.asarray(res.out), want)
+                        carry_sh = res.carry
+                for got, want in zip(carry_sh, ref_carry):
+                    np.testing.assert_array_equal(np.asarray(got), want)
+        # engine + mesh: recurrent streams through the slot pool
+        from repro.serve import tnn_engine
+        rparams = network.init_network(jax.random.PRNGKey(0), rnet)
+        streams = [v[:3], v[3:6], v[6:], v[2:4]]
+        eng = tnn_engine.TNNEngine(
+            rparams, rnet, tnn_engine.TNNServeConfig(n_slots=3),
+            mesh=mesh)
+        assert eng.stateful
+        for s, r in zip(streams, eng.serve(streams)):
+            np.testing.assert_array_equal(
+                tnn_engine.reference_outputs(rparams, rnet, s), r)
+        print('SHARDED_RECURRENT_BIT_EXACT_OK')
     """))
 
 

@@ -1,0 +1,180 @@
+"""SlotPool stateful-slot contract (DESIGN.md §5.1).
+
+Property-based coverage of the lifecycle the serving engines build on:
+``submit -> admit (on_admit initialises state) -> per-step state mutation
+-> retire returns the final state``. The properties pin
+
+* state retention: a slot's ``state`` survives arbitrary retire/re-admit
+  churn around it, and ``retire`` hands back exactly the last value the
+  engine wrote;
+* FIFO fairness: requests are admitted in submission order into the
+  lowest free slot, even when slots free mid-flight in scrambled order;
+* bounded-queue admission control: ``max_pending`` rejects with
+  :class:`QueueFull` exactly when the pending queue is full, and the
+  rejection counter matches.
+"""
+
+import itertools
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serve import QueueFull, SlotEntry, SlotPool
+
+
+def _fake_clock():
+    counter = itertools.count()
+    return lambda: float(next(counter))
+
+
+# ------------------------------------------------------------ lifecycle
+def test_on_admit_initialises_state_before_first_step():
+    seen = []
+
+    def on_admit(idx: int, entry: SlotEntry) -> None:
+        entry.state = {"slot": idx, "steps": 0}
+        seen.append((idx, entry.item))
+
+    pool: SlotPool[str, dict] = SlotPool(2, _fake_clock(), on_admit=on_admit)
+    e = pool.submit("a")
+    assert e.state is None                      # pending: no state yet
+    pool.submit("b")
+    pool.submit("c")
+    admitted = pool.admit()
+    assert [(i, en.item) for i, en in admitted] == [(0, "a"), (1, "b")]
+    assert seen == [(0, "a"), (1, "b")]         # hook fired per placement
+    assert e.state == {"slot": 0, "steps": 0}
+    done = pool.retire(0)
+    assert done is e and done.state == {"slot": 0, "steps": 0}
+    assert pool.admit()[0][1].item == "c"       # freed slot re-fills
+
+
+def test_retire_returns_final_state_not_initial():
+    pool: SlotPool[int, list] = SlotPool(
+        1, _fake_clock(), on_admit=lambda i, e: setattr(e, "state", []))
+    pool.submit(7)
+    (idx, entry), = pool.admit()
+    entry.state.append("cycle0")
+    entry.state.append("cycle1")
+    assert pool.retire(idx).state == ["cycle0", "cycle1"]
+
+
+def test_pool_validation_and_counters():
+    with pytest.raises(ValueError):
+        SlotPool(0)
+    with pytest.raises(ValueError):
+        SlotPool(1, max_pending=-1)
+    pool = SlotPool(1, _fake_clock(), max_pending=0)
+    with pytest.raises(QueueFull):
+        pool.submit("x")                        # zero queue: instant reject
+    assert (pool.n_submitted, pool.n_rejected) == (0, 1)
+
+
+def test_bounded_queue_rejects_then_recovers():
+    pool = SlotPool(1, _fake_clock(), max_pending=2)
+    pool.submit("a")
+    pool.admit()                                # queue empty again
+    pool.submit("b")
+    pool.submit("c")
+    with pytest.raises(QueueFull):
+        pool.submit("d")                        # queue at max_pending
+    assert pool.n_rejected == 1
+    pool.retire(0)
+    pool.admit()                                # drains one pending slot
+    pool.submit("d")                            # now fits
+    assert pool.n_submitted == 4 and pool.n_pending == 2
+
+
+# ------------------------------------------------------------ properties
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 5), st.lists(st.integers(1, 9), min_size=1,
+                                   max_size=24),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_state_retention_under_churn(n_slots, works, seed):
+    """Each request's state accumulates exactly its own step count across
+    arbitrary interleaved retirements and re-admissions: slot churn never
+    leaks one request's state into another's."""
+    import random
+    rng = random.Random(seed)
+
+    def on_admit(idx, entry):
+        entry.state = {"req": entry.item, "steps": 0}
+
+    pool: SlotPool[int, dict] = SlotPool(
+        n_slots, _fake_clock(), on_admit=on_admit)
+    remaining = {i: w for i, w in enumerate(works)}
+    for i in range(len(works)):
+        pool.submit(i)
+    finals = {}
+    while pool.has_work:
+        pool.admit()
+        live = list(pool.live())
+        # step every live slot once
+        for idx, entry in live:
+            assert entry.state["req"] == entry.item
+            entry.state["steps"] += 1
+        # retire completed slots in a scrambled order
+        done = [(idx, e) for idx, e in live
+                if e.state["steps"] >= remaining[e.item]]
+        rng.shuffle(done)
+        for idx, _ in done:
+            out = pool.retire(idx)
+            finals[out.item] = out.state
+    assert pool.n_retired == len(works)
+    for i, w in remaining.items():
+        assert finals[i] == {"req": i, "steps": w}
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4), st.lists(st.integers(1, 6), min_size=1,
+                                   max_size=20),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_fifo_fairness_under_midflight_refill(n_slots, works, seed):
+    """Admission order == submission order (seq ascending) no matter which
+    slots free first, and each admission takes the lowest free index."""
+    import random
+    rng = random.Random(seed)
+    pool: SlotPool[int, None] = SlotPool(n_slots, _fake_clock())
+    for i in range(len(works)):
+        pool.submit(i)
+    admitted_seqs = []
+    left = {i: w for i, w in enumerate(works)}
+    while pool.has_work:
+        placements = pool.admit()
+        for idx, entry in placements:
+            admitted_seqs.append(entry.seq)
+        # lowest-free-index rule: placements are ascending slot indices
+        assert [i for i, _ in placements] == sorted(i for i, _ in placements)
+        for idx, entry in list(pool.live()):
+            left[entry.item] -= 1
+        done = [idx for idx, e in pool.live() if left[e.item] <= 0]
+        rng.shuffle(done)
+        for idx in done:
+            pool.retire(idx)
+    assert admitted_seqs == sorted(admitted_seqs) == list(range(len(works)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 4), st.integers(1, 30))
+def test_property_bounded_queue_invariant(n_slots, max_pending, n_requests):
+    """Submitting n_requests into an idle pool: the queue never exceeds
+    max_pending, rejections are exactly the overflow, and every accepted
+    request eventually retires with the books balancing."""
+    pool: SlotPool[int, None] = SlotPool(
+        n_slots, _fake_clock(), max_pending=max_pending)
+    accepted = 0
+    for i in range(n_requests):
+        try:
+            pool.submit(i)
+            accepted += 1
+        except QueueFull:
+            pass
+        assert pool.n_pending <= max_pending
+    assert pool.n_rejected == n_requests - accepted
+    drained = 0
+    while pool.has_work:
+        pool.admit()
+        for idx, _ in list(pool.live()):
+            pool.retire(idx)                    # 1-step requests
+            drained += 1
+    assert drained == accepted == pool.n_retired
