@@ -1,0 +1,210 @@
+"""Learn-while-serving benchmark: the cost of online STDP + snapshots.
+
+Serves one fixed synthetic client population through the slot engine four
+ways — learning off, learning on at ``stdp_every`` in {1, 4}, and learning
+on with async snapshots every 50 steps — and reports volleys/sec for each
+plus the two §5.5 overhead ratios:
+
+* ``learn_on_slowdown``   learning-off wall-clock / learning-on wall-clock
+  at ``stdp_every=1`` (the worst case: STDP every gamma cycle). Gate: a
+  full-size run must keep learning-on within 2x of learning-off — the
+  forward pass dominates and minibatch STDP is one extra bounded-depth
+  reduction per layer.
+* ``snapshot_overhead``   extra wall-clock of ``checkpoint_every=50`` with
+  async saves, as a fraction of the no-snapshot learning run. Gate: <10%
+  on a full-size run — the serve thread only pays the host copy; the
+  serialization rides the writer thread.
+
+Correctness rides along: the learning-off engine must stay bit-exact
+against the unbatched oracle (the §5.3 invariant the learning path may
+not disturb).
+
+Emits the usual CSV rows plus ``BENCH_serve_learn.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve_learn [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (emit, note_meta, reset_results, smoke_mode,
+                               spike_density, write_json)
+from repro.core import layer, network
+from repro.serve import tnn_engine
+
+from examples.serve_tnn import build_network, synth_clients
+
+
+def _build(smoke: bool):
+    """Smoke reuses the tiny example net (plumbing only); full-size uses a
+    256-line net so per-step time is dominated by the batched forward (the
+    regime the snapshot-overhead gate is about — against a toy net the
+    constant ~1 ms writer-thread cost per snapshot swamps 50 cheap steps
+    and the ratio measures GIL contention, not checkpointing)."""
+    if smoke:
+        return build_network(), 4, 8
+    t_steps = 32
+    l1 = layer.TNNLayer(n_columns=32, rf_size=16, n_neurons=12, threshold=10,
+                        t_steps=t_steps, dendrite="catwalk", k=3)
+    l2 = layer.TNNLayer(n_columns=24, rf_size=16, n_neurons=8, threshold=8,
+                        t_steps=t_steps, dendrite="catwalk", k=3)
+    return network.make_network([l1, l2]), 32, 16
+
+
+def _population(n_clients: int, n_cycles: int, net,
+                n_features: int, n_fields: int) -> list:
+    """Fixed-length client streams (synth bursts tiled to ``n_cycles``) so
+    every engine variant steps the exact same batch sequence."""
+    streams = []
+    for s in synth_clients(n_clients, n_features=n_features,
+                           n_fields=n_fields,
+                           t_max=net.layers[0].t_steps):
+        reps = -(-n_cycles // s.shape[0])
+        streams.append(np.tile(s, (reps, 1))[:n_cycles])
+    return streams
+
+
+def _drain_once(eng, streams) -> float:
+    """One timed drain of the whole population through ``eng``."""
+    for s in streams:
+        eng.submit(s)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    # join the async writer OUTSIDE the timed region: the §5.5 contract
+    # is that the serve thread pays only the host copy + any GIL
+    # contention the writer causes mid-drain, never the join
+    eng.checkpoint_wait()
+    return dt
+
+
+def _bench_variants(params, net, streams, variants, iters: int = 1):
+    """Warm every variant, then interleave their timed drains round-robin
+    and take per-variant medians. Interleaving matters: the overhead gates
+    below are ratios between variants, and sequential A-then-B timing
+    lets minutes of machine drift land entirely on one side (observed
+    swings of +-20% on a shared runner — larger than the quantities being
+    gated). Round-robin puts every variant through the same drift."""
+    engines = {}
+    for label, scfg in variants:
+        eng = tnn_engine.TNNEngine(params, net, scfg)
+        # warmup compiles every shape the timed run will hit (learning
+        # engines warm the learn step too — same streams, same batch
+        # shapes); weights move during warmup, which is fine: throughput
+        # is composition-dependent, not weight-dependent
+        eng.serve(list(streams))
+        eng.reset_stats()
+        engines[label] = (eng, [])
+    for _ in range(iters):
+        for label, _ in variants:
+            eng, times = engines[label]
+            times.append(_drain_once(eng, streams))
+    total = sum(s.shape[0] for s in streams)
+    out = {}
+    for label, (eng, times) in engines.items():
+        dt = _median(times)
+        st = eng.stats()
+        emit(f"serve/learn_{label}", dt * 1e6 / total,
+             f"{total / dt:.0f}_volleys_per_s",
+             n_stdp_updates=st["n_stdp_updates"],
+             n_snapshots=st["n_snapshots"])
+        out[label] = (dt, eng, times)
+    return out
+
+
+def _median(xs):
+    return sorted(xs)[len(xs) // 2]
+
+
+def _ratio(res, num: str, den: str) -> float:
+    """Median of per-round time ratios between two variants. Per-drain
+    wall-clock on a shared runner swings +-15% minute to minute — bigger
+    than the overheads being gated — but two drains in the SAME round-
+    robin round see the same drift, so their ratio is stable; the median
+    across rounds then drops the rounds a background burst still split."""
+    _, _, t_num = res[num]
+    _, _, t_den = res[den]
+    return _median([a / b for a, b in zip(t_num, t_den)])
+
+
+def main(smoke: bool = False) -> None:
+    smoke = smoke or smoke_mode()
+    reset_results()
+    # sized so checkpoint_every=50 fires >2x even in smoke: steps >=
+    # n_clients * n_cycles / n_slots
+    n_clients = 26 if smoke else 64
+    n_cycles = 8
+    n_slots = 2 if smoke else 4
+    ckpt_every = 50
+
+    net, n_features, n_fields = _build(smoke)
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    streams = _population(n_clients, n_cycles, net, n_features, n_fields)
+    total = sum(s.shape[0] for s in streams)
+    note_meta(input_spike_density=spike_density(
+        np.concatenate(streams, axis=0)),
+        n_clients=n_clients, n_cycles=n_cycles, n_slots=n_slots)
+
+    def scfg(**kw):
+        return tnn_engine.TNNServeConfig(n_slots=n_slots,
+                                         backend="closed_form", **kw)
+
+    # the learning path may not disturb the serving invariant: spot-check
+    # learning-off outputs against the unbatched oracle
+    for s in streams[:2]:
+        ref = tnn_engine.reference_outputs(params, net, s)
+        got = tnn_engine.TNNEngine(params, net, scfg()).serve([s])[0]
+        if not np.array_equal(ref, got):
+            raise AssertionError("serve output diverges from oracle")
+
+    iters = 1 if smoke else 7
+    with tempfile.TemporaryDirectory() as d:
+        res = _bench_variants(params, net, streams, [
+            ("off", scfg()),
+            ("on_every1", scfg(learn=True, stdp_every=1)),
+            ("on_every4", scfg(learn=True, stdp_every=4)),
+            (f"on_snap{ckpt_every}",
+             scfg(learn=True, stdp_every=1, checkpoint_dir=d,
+                  checkpoint_every=ckpt_every, checkpoint_async=True)),
+        ], iters=iters)
+    _, eng_snap, _ = res[f"on_snap{ckpt_every}"]
+    n_snaps = eng_snap.n_snapshots
+    dt_on4, dt_off = res["on_every4"][0], res["off"][0]
+
+    slowdown = _ratio(res, "on_every1", "off")
+    overhead = _ratio(res, f"on_snap{ckpt_every}", "on_every1") - 1.0
+    emit("serve/learn_on_slowdown", slowdown * 100.0,
+         f"{slowdown:.2f}x_vs_learning_off")
+    emit("serve/learn_snapshot_overhead", max(overhead, 0.0) * 100.0,
+         f"{overhead * 100.0:+.1f}pct_at_every{ckpt_every}_async")
+    print(f"# learning-on (stdp_every=1): {slowdown:.2f}x learning-off; "
+          f"stdp_every=4: {dt_on4 / dt_off:.2f}x; "
+          f"async snapshots every {ckpt_every}: {overhead * 100.0:+.1f}% "
+          f"({n_snaps:.0f} snapshots, {total} volleys, B={n_slots})")
+
+    if not smoke:
+        # §5.5 acceptance gates — full-size runs only (smoke numbers are
+        # plumbing, not perf). Both are same-machine ratios, so shared-
+        # runner noise largely cancels.
+        if slowdown > 2.0:
+            raise AssertionError(
+                f"learning-on is {slowdown:.2f}x learning-off (gate: 2x)")
+        if overhead > 0.10:
+            raise AssertionError(
+                f"async snapshotting costs {overhead * 100.0:.1f}% "
+                "wall-clock (gate: 10%)")
+    write_json("serve_learn", smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI plumbing validation")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -41,6 +41,10 @@ _COL, _DP, _ = sharding_specs.tnn_volley_axes()
 #: axis entries for the recurrent carry (B, n_outputs): batch over DP,
 #: flattened output lines over "column" (sharding.specs.tnn_carry_axes)
 _CARRY = sharding_specs.tnn_carry_axes()
+#: axis entries for a (C, Q, rf) weight stack: columns over "column"
+#: (sharding.specs.tnn_param_axes) — the STDP output constraint, so an
+#: updated weight stack keeps the tnn_param_pspec placement
+_PARAM = sharding_specs.tnn_param_axes()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -273,6 +277,10 @@ def layer_step(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer,
     else:
         new_w = jax.vmap(one_column)(weights, times_rf, out_cb, win_cb,
                                      ckeys)
+    # pin the updated stack where tnn_param_pspec placed the input stack
+    # (identity without a mesh): a learning service's weights never drift
+    # off their column shards across steps (DESIGN.md §6.4).
+    new_w = sharding_specs.maybe_wsc(new_w, *_PARAM)
     return new_w, out_times, winners
 
 

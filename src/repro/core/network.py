@@ -398,28 +398,98 @@ def sparse_widths(cfg: TNNNetwork, first: int) -> Tuple[int, ...]:
     return tuple(widths)
 
 
+class StepResult(NamedTuple):
+    """Everything one *learning* gamma cycle produces (:func:`step`).
+
+    ``params``: per-layer post-STDP weights — the explicit weight state a
+    learning service threads from step to step (nothing is closed over).
+    ``out`` / ``winners`` / ``carry`` mirror :class:`ForwardResult`: the
+    forward quantities are computed at the PRE-update weights (learning is
+    applied after the cycle, like the hardware's post-WTA STDP datapath),
+    so ``out`` is bit-exact with :func:`forward` at the same weights.
+    """
+
+    params: Tuple[jax.Array, ...]
+    out: jax.Array
+    winners: Tuple[jax.Array, ...]
+    carry: Tuple[Optional[jax.Array], ...]
+
+
+def step(params: Sequence[jax.Array], volleys: jax.Array, cfg: TNNNetwork,
+         *, key: Optional[jax.Array] = None,
+         carry: Optional[Sequence[Optional[jax.Array]]] = None
+         ) -> StepResult:
+    """Forward + layer-local minibatch STDP — THE learning entry point.
+
+    One gamma cycle through the stack with every layer applying its own
+    STDP update (:func:`repro.core.layer.layer_step`): layer l learns from
+    the volley it actually saw this cycle (the previous layer's PRE-update
+    output), so a single sweep advances the whole stack — greedy
+    layer-local learning, no backward pass. ``carry`` threads recurrent
+    state exactly like :func:`forward` (a recurrent layer's STDP slice
+    includes its carry lines, so the recurrent weight columns learn under
+    the same rule); the returned ``carry`` feeds the stream's next cycle.
+
+    The schedule is barriered: a learning step reduces per-volley deltas
+    across the whole batch (minibatch STDP), which is a batch-wide barrier
+    by construction — pipelined micro-batching applies to pure forward
+    steps only (DESIGN.md §5.5). All-``NO_SPIKE`` rows (a serving batch's
+    free slots) contribute zero delta — no input spike means no capture /
+    backoff / search case fires — so padding is inert for learning too;
+    with the default ``"mean"`` reduction the batch size still sets the
+    (deterministic) step scale.
+
+    Args mirror :func:`forward`; ``key=None`` selects the deterministic
+    expectation rule (replayable — the crash-recovery contract), a PRNG
+    key the stochastic one. Returns :class:`StepResult`; a 1-D single
+    volley drops the batch dim from every non-param field.
+    """
+    n_layers = len(cfg.layers)
+    if carry is None:
+        carry_in: Tuple[Optional[jax.Array], ...] = (None,) * n_layers
+    else:
+        if len(carry) != n_layers:
+            raise ValueError(f"carry has {len(carry)} entries for "
+                             f"{n_layers} layers")
+        carry_in = tuple(carry)
+    single = volleys.ndim == 1
+    x = volleys[None, :] if single else volleys
+    x = x.astype(jnp.int32)
+    if single:
+        carry_in = tuple(c[None, :] if c is not None and c.ndim == 1 else c
+                         for c in carry_in)
+    keys = (jax.random.split(key, n_layers)
+            if key is not None else [None] * n_layers)
+    new_params, winners_all, carry_out = [], [], []
+    out = None
+    for w, lc, lk, c in zip(params, cfg.layers, keys, carry_in):
+        new_w, out, winners = layer_mod.layer_step(w, x, lc, lk, c)
+        new_params.append(new_w)
+        winners_all.append(winners)
+        x = out.reshape(out.shape[0], lc.n_outputs)
+        carry_out.append(x if lc.recurrent else None)
+    res = StepResult(tuple(new_params), out, tuple(winners_all),
+                     tuple(carry_out))
+    if single:
+        res = StepResult(
+            params=res.params,
+            out=res.out[0],
+            winners=tuple(w[0] for w in res.winners),
+            carry=tuple(c if c is None else c[0] for c in res.carry))
+    return res
+
+
 def network_step(params: Sequence[jax.Array], volleys: jax.Array,
                  cfg: TNNNetwork, key: Optional[jax.Array] = None
                  ) -> Tuple[Tuple[jax.Array, ...], jax.Array,
                             Tuple[jax.Array, ...]]:
-    """Forward + layer-local minibatch STDP in every layer.
-
-    Each layer updates from the volley it actually saw this cycle (the
-    previous layer's pre-update output), so a single sweep advances the
-    whole stack. Returns (new_params, last_out_times, per_layer_winners).
+    """Feedforward wrapper over :func:`step` (no carry threading; a 1-D
+    volley keeps its promoted batch dim, the historical contract).
+    Returns (new_params, last_out_times, per_layer_winners).
     """
-    keys = (jax.random.split(key, len(cfg.layers))
-            if key is not None else [None] * len(cfg.layers))
     x = volleys[None, :] if volleys.ndim == 1 else volleys
-    new_params = []
-    winners_all = []
-    out = None
-    for w, lc, lk in zip(params, cfg.layers, keys):
-        new_w, out, winners = layer_mod.layer_step(w, x, lc, lk)
-        new_params.append(new_w)
-        winners_all.append(winners)
-        x = out.reshape(out.shape[0], lc.n_outputs)
-    return tuple(new_params), out, tuple(winners_all)
+    res = step(params, x, cfg, key=key)
+    return res.params, res.out, res.winners
 
 
 def train_network(params: Sequence[jax.Array], volleys: jax.Array,

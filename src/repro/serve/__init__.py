@@ -6,7 +6,8 @@
 * :mod:`repro.serve.engine` — LM engine (prefill + cached decode,
   continuous batching over per-slot KV-cache positions).
 * :mod:`repro.serve.tnn_engine` — TNN volley engine (continuous batching;
-  recurrent streams keep their carry in the slot).
+  recurrent streams keep their carry in the slot; learn-while-serving +
+  crash recovery behind :func:`serve_resilient` — DESIGN.md §5.5).
 """
 
 from repro.serve.engine import Engine, LMRequest, ServeConfig
@@ -16,6 +17,7 @@ from repro.serve.tnn_engine import (
     TNNEngine,
     TNNRequest,
     TNNServeConfig,
+    serve_resilient,
 )
 
 __all__ = [
@@ -30,4 +32,5 @@ __all__ = [
     "TNNRequest",
     "TNNServeConfig",
     "latency_summary",
+    "serve_resilient",
 ]

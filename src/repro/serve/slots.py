@@ -188,6 +188,24 @@ class SlotPool(Generic[T, S]):
         self.n_retired += 1
         return entry
 
+    def clear(self) -> List[SlotEntry[T, S]]:
+        """Drop every live AND pending entry; returns the dropped entries.
+
+        The crash-recovery primitive (DESIGN.md §5.5): after a restore the
+        engine's weights have rolled back to the last snapshot, so every
+        in-flight stream's partial progress is stale — the serve driver
+        clears the pool and resubmits the uncommitted streams from their
+        beginning (restore-and-replay). Dropped entries do NOT count as
+        retired; counters other than the live/pending sets are untouched,
+        so ``n_submitted``/``n_retired`` keep describing the pool's whole
+        history.
+        """
+        dropped = [e for _, e in self.live()]
+        dropped.extend(self._pending)
+        self._slots = [None] * self.n_slots
+        self._pending.clear()
+        return dropped
+
     def live(self) -> Iterator[Tuple[int, SlotEntry[T, S]]]:
         """(slot index, entry) for every occupied slot, ascending index."""
         for idx, entry in enumerate(self._slots):
@@ -211,6 +229,16 @@ class SlotPool(Generic[T, S]):
     def occupancy(self) -> float:
         """Fraction of slots currently occupied."""
         return self.n_live / self.n_slots
+
+    @property
+    def pending_occupancy(self) -> float:
+        """Pending-queue depth as a fraction of ``max_pending`` (0.0 when
+        the queue is unbounded or empty) — the admission-pressure signal
+        the learn-while-serving backpressure rule watches (DESIGN.md
+        §5.5)."""
+        if not self.max_pending:
+            return 0.0
+        return len(self._pending) / self.max_pending
 
 
 def latency_summary(entries: Iterable[SlotEntry]) -> Dict[str, float]:

@@ -48,13 +48,38 @@ compilation per (B, network) pair. Everything is int32 end to end, so engine
 outputs are bit-exact against unbatched per-request ``network.forward`` calls
 regardless of batch composition (pinned by tests/test_serve_tnn.py).
 
+Learn while serving (DESIGN.md §5.5): behind ``TNNServeConfig(learn=True)``
+the engine applies per-gamma-cycle layer-local STDP to the live slot batch —
+every ``stdp_every`` steps the jitted step runs ``network.step`` (forward +
+minibatch STDP, carry threaded) instead of ``network.forward`` and the
+engine's weights advance; weights are explicit jit arguments throughout, so
+a learning step never recompiles and, under a mesh, the updated stacks stay
+column-sharded (``layer_step`` pins them via ``specs.tnn_param_axes``).
+Free-slot padding rows are inert for learning exactly as they are for
+inference (no input spike -> zero STDP delta). Durability: with
+``checkpoint_dir``/``checkpoint_every`` set, the engine snapshots
+``(weights, step counter, n_stdp_updates)`` through
+``train/checkpoint.py``'s :class:`CheckpointManager` (async saves off the
+serve thread), ``TNNEngine(..., resume=True)`` restores the latest snapshot
+at construction, and :func:`serve_resilient` is the ``run_resilient``-style
+serve driver: on an (injected) ``WorkerFailure`` it rolls the engine back to
+the last snapshot and replays the streams not yet committed — exactly-once
+per retired stream, bit-exact retired outputs with learning off. Learning
+auto-pauses under admission pressure (queue-depth / step-latency
+thresholds) and resumes when pressure clears; ``stats()`` reports
+``n_stdp_updates`` / ``n_snapshots`` / ``n_restores`` /
+``learning_paused`` and per-layer weight-drift norms.
+
 Front doors:
 
 * :meth:`TNNEngine.serve` — synchronous: submit a list of volley streams,
   drain the pool, get results in submission order.
 * :class:`AsyncTNNEngine` — ``asyncio``: concurrent clients ``await
   engine.submit(stream)``; a pump task steps the shared pool and resolves each
-  client's future on retirement.
+  client's future on retirement. Transient ``QueueFull`` admission rejections
+  are absorbed by a bounded retry-with-backoff before surfacing.
+* :func:`serve_resilient` — crash-survivable batch driver with failure
+  injection, restore-and-replay, and heartbeat reporting.
 """
 
 from __future__ import annotations
@@ -75,6 +100,8 @@ from repro.core import coding, compaction, network, neuron
 from repro.serve import slots
 from repro.sharding import compat
 from repro.sharding import specs as sharding_specs
+from repro.train import checkpoint as CKPT
+from repro.train import fault_tolerance
 
 #: neuron-bank engines that consume a static compaction width under jit
 SPARSE_ENGINES = ("event", "pallas_compact")
@@ -119,6 +146,49 @@ class TNNServeConfig:
     #: growing queue latency without bound; rejections are counted in
     #: ``stats()['n_rejected']``.
     max_pending: Optional[int] = None
+    # ----------------------------------------- learn while serving (§5.5)
+    #: apply per-gamma-cycle layer-local STDP to the live slot batch: a
+    #: learning step runs ``network.step`` (forward + minibatch STDP over
+    #: the whole batch at the pre-step weights, recurrent carries
+    #: threaded) and the engine's weight state advances. Outputs are
+    #: computed at the pre-update weights, so a learning step's spike
+    #: times are bit-exact with the same step served learning-off.
+    learn: bool = False
+    #: learning cadence: STDP fires on steps where ``step_id % stdp_every
+    #: == 0`` (1 = every gamma cycle, the online rule over live traffic).
+    #: Learning steps always run the barriered schedule — minibatch STDP
+    #: reduces across the whole batch, a barrier by construction — while
+    #: the steps in between keep the configured pipelined schedule.
+    stdp_every: int = 1
+    #: None (default) selects the deterministic expectation STDP rule —
+    #: the replayable choice the crash-recovery contract relies on; an int
+    #: seeds the stochastic rule, with the per-step key folded from
+    #: ``step_id`` so restore-and-replay still re-draws identically.
+    stdp_seed: Optional[int] = None
+    # ------------------------------------------------- durability (§5.5)
+    #: snapshot directory for ``train/checkpoint.py``'s CheckpointManager;
+    #: None disables snapshotting (and makes ``resume=True`` invalid).
+    checkpoint_dir: Optional[str] = None
+    #: snapshot every N engine steps (0 = never). Snapshots carry the
+    #: weights + the persistent step counter + ``n_stdp_updates``; the
+    #: atomic-rotation contract means a crash mid-save can never corrupt
+    #: the previous snapshot.
+    checkpoint_every: int = 0
+    #: rotating snapshots kept on disk (CheckpointManager ``keep``).
+    checkpoint_keep: int = 3
+    #: serialize snapshots off the serve thread (the state is copied to
+    #: host numpy synchronously — the step's weights are immutable jax
+    #: arrays, so the async writer can never observe a later update).
+    checkpoint_async: bool = True
+    # ---------------------------------------- graceful degradation (§5.5)
+    #: pause learning while the pending queue holds at least this fraction
+    #: of ``max_pending`` (requires ``max_pending``); learning resumes the
+    #: step pressure clears. Inference never pauses — shedding the STDP
+    #: update is the cheap way to serve through a burst.
+    learn_pause_queue_frac: Optional[float] = None
+    #: pause learning while the previous step's wall-clock exceeded this
+    #: many seconds; resumes when a (non-learning) step comes in under it.
+    learn_pause_step_s: Optional[float] = None
 
 
 #: a slot's persistent memory: per-layer recurrent carries, ``None`` entries
@@ -180,6 +250,7 @@ class TNNEngine:
         net: network.TNNNetwork,
         scfg: Optional[TNNServeConfig] = None,
         mesh: Optional[Mesh] = None,
+        resume: bool = False,
     ):
         scfg = scfg or TNNServeConfig()
         if scfg.backend != "auto":
@@ -197,11 +268,8 @@ class TNNEngine:
         #: under the data spec, and the jitted stack traces inside the mesh
         #: scope so the layer constraints bind (DESIGN.md §6.4)
         self.mesh = mesh
+        self.params = self._place_params(params)
         if mesh is not None:
-            self.params = jax.device_put(
-                tuple(jnp.asarray(p) for p in params),
-                network.param_shardings(net, mesh),
-            )
             self._batch_sharding = network.data_sharding(net, mesh, scfg.n_slots)
             # recurrent-carry placement: each (B, n_outputs_l) carry batch
             # lands batch-over-data, lines-over-column — the same shards
@@ -217,7 +285,6 @@ class TNNEngine:
                 for lc in net.layers
             )
         else:
-            self.params = tuple(jnp.asarray(p) for p in params)
             self._batch_sharding = None
             self._carry_shardings = (None,) * len(net.layers)
         #: which layers thread a recurrent carry (slot state is live iff any)
@@ -278,23 +345,198 @@ class TNNEngine:
         self._run_s = 0.0
         self._density_sum = 0.0
         self._backend_steps: Dict[str, int] = {}
+        # ---------------------------------- learning + durability (§5.5)
+        if scfg.stdp_every < 1:
+            raise ValueError(f"stdp_every must be >= 1, got "
+                             f"{scfg.stdp_every}")
+        if scfg.checkpoint_every < 0:
+            raise ValueError(f"checkpoint_every must be >= 0, got "
+                             f"{scfg.checkpoint_every}")
+        if scfg.checkpoint_every and scfg.checkpoint_dir is None:
+            raise ValueError("checkpoint_every > 0 needs checkpoint_dir")
+        if scfg.learn_pause_queue_frac is not None:
+            if scfg.max_pending is None:
+                raise ValueError("learn_pause_queue_frac measures "
+                                 "max_pending occupancy — set max_pending")
+            if scfg.learn_pause_queue_frac <= 0.0:
+                raise ValueError("learn_pause_queue_frac must be > 0")
+        self._stdp_base_key = (
+            jax.random.PRNGKey(scfg.stdp_seed)
+            if scfg.stdp_seed is not None else None)
+        #: persistent engine-step counter: unlike ``n_steps`` it survives
+        #: ``reset_stats`` and restores with snapshots — the STDP cadence,
+        #: the snapshot schedule, and the stochastic-rule keys all key off
+        #: it, so a restored engine replays the exact same decisions.
+        self.step_id = 0
+        self.n_stdp_updates = 0
+        self.n_snapshots = 0
+        self.n_restores = 0
+        self.learning_paused = False
+        self.n_learn_pauses = 0
+        self._last_step_s = 0.0
+        self._ckpt: Optional[CKPT.CheckpointManager] = None
+        if scfg.checkpoint_dir is not None and scfg.checkpoint_every > 0:
+            self._ckpt = CKPT.CheckpointManager(
+                scfg.checkpoint_dir, keep=scfg.checkpoint_keep,
+                every=scfg.checkpoint_every,
+                async_save=scfg.checkpoint_async)
+        if resume:
+            if self._ckpt is None:
+                raise ValueError("resume=True needs checkpoint_dir and "
+                                 "checkpoint_every > 0")
+            if CKPT.latest_step(self._ckpt.dir) is not None:
+                self.restore()
+        # host-side reference weights for the per-layer drift norms (and
+        # the no-snapshot restore fallback): the engine's weights as of
+        # construction — post-resume, so drift measures learning since
+        # THIS service instance came up
+        self._params_host0 = tuple(np.asarray(p) for p in self.params)
 
-    def _forward_fn(self, net: network.TNNNetwork):
-        """Step function over a (possibly engine-pinned) network:
-        ``network.forward`` with the engine's micro-batch count — the
-        barriered schedule at M=1, the §5.4 pipelined schedule above it,
-        bit-exact either way, so every jit variant (``_fwd_for``) shares
-        it. Signature ``(params, volleys, carry) -> (out, carry_out)``;
-        the carry tuple's ``None`` entries (feedforward layers, or every
-        layer in a stateless network) vanish from the jit pytree, so a
-        feedforward engine compiles the exact same step it always did."""
+    def _forward_fn(self, net: network.TNNNetwork, learn: bool = False):
+        """Step function over a (possibly engine-pinned) network.
+
+        Inference (``learn=False``): ``network.forward`` with the engine's
+        micro-batch count — the barriered schedule at M=1, the §5.4
+        pipelined schedule above it, bit-exact either way, so every jit
+        variant (``_fwd_for``) shares it. Signature ``(params, volleys,
+        carry) -> (out, carry_out)``; the carry tuple's ``None`` entries
+        (feedforward layers, or every layer in a stateless network) vanish
+        from the jit pytree, so a feedforward engine compiles the exact
+        same step it always did.
+
+        Learning (``learn=True``): ``network.step`` — forward + layer-local
+        minibatch STDP with the carry threaded, weights in / weights out as
+        explicit jit state (never closed over, so a weight update is a new
+        argument, not a recompile). Signature ``(params, volleys, carry,
+        key) -> (out, carry_out, new_params)``; ``key=None`` (an empty
+        pytree) selects the deterministic expectation rule. Learning steps
+        are whole-batch barriers (minibatch STDP reduces across the batch),
+        so the micro-batch count does not apply — outputs stay bit-exact
+        with the pipelined inference schedule regardless.
+        """
         m = self.n_stages
+
+        if learn:
+            def fn(p, v, c, k):
+                res = network.step(p, v, net, key=k, carry=c)
+                return res.out, res.carry, res.params
+
+            return fn
 
         def fn(p, v, c):
             res = network.forward(p, v, net, microbatches=m, carry=c)
             return res.out, res.carry
 
         return fn
+
+    def _place_params(self, params: Sequence) -> Tuple[jax.Array, ...]:
+        """Weight stacks -> device(s): column-sharded under the engine's
+        mesh (``network.param_shardings``), plain device arrays otherwise.
+        Shared by construction and the :meth:`restore` rollback, so a
+        restored engine's weights land exactly where the originals did."""
+        if self.mesh is not None:
+            return jax.device_put(
+                tuple(jnp.asarray(p) for p in params),
+                network.param_shardings(self.net, self.mesh),
+            )
+        return tuple(jnp.asarray(p) for p in params)
+
+    def _stdp_key(self) -> Optional[jax.Array]:
+        """Per-step STDP key: ``None`` (deterministic expectation rule)
+        unless ``stdp_seed`` was set, in which case the base key folded
+        with the persistent ``step_id`` — a restored engine replaying step
+        s re-draws the exact same randomness it drew the first time."""
+        if self._stdp_base_key is None:
+            return None
+        return jax.random.fold_in(self._stdp_base_key, self.step_id)
+
+    def _learn_gate(self) -> bool:
+        """Should THIS step apply STDP? The §5.5 graceful-degradation
+        rule: learning pauses (inference never does) while admission
+        pressure — pending-queue occupancy or the previous step's
+        wall-clock — sits above the configured thresholds, and resumes
+        the step pressure clears. Pause transitions are counted
+        (``stats()['n_learn_pauses']``)."""
+        scfg = self.scfg
+        if not scfg.learn:
+            return False
+        pressured = (
+            scfg.learn_pause_queue_frac is not None
+            and self.pool.pending_occupancy >= scfg.learn_pause_queue_frac
+        ) or (
+            scfg.learn_pause_step_s is not None
+            and self._last_step_s > scfg.learn_pause_step_s
+        )
+        if pressured:
+            if not self.learning_paused:
+                self.learning_paused = True
+                self.n_learn_pauses += 1
+            return False
+        self.learning_paused = False
+        return self.step_id % scfg.stdp_every == 0
+
+    def _snapshot_state(self) -> Dict[str, object]:
+        """The durable state a snapshot carries: the weight stacks plus
+        the persistent counters (``step_id``, ``n_stdp_updates``) — enough
+        to make a restored engine's cadence/key/snapshot decisions
+        identical to the original run's."""
+        return {
+            "params": tuple(self.params),
+            "counters": np.asarray(
+                [self.step_id, self.n_stdp_updates], np.int32),
+        }
+
+    def _maybe_snapshot(self) -> None:
+        """Hand the step's state to the CheckpointManager on the
+        ``checkpoint_every`` cadence. With ``checkpoint_async`` the
+        manager copies to host numpy synchronously and serializes on its
+        own thread — the weights are immutable jax arrays, so a later
+        STDP update can never leak into an in-flight save."""
+        if self._ckpt is None:
+            return
+        if self._ckpt.maybe_save(self.step_id, self._snapshot_state()):
+            self.n_snapshots += 1
+
+    def checkpoint_wait(self) -> None:
+        """Block until any in-flight async snapshot has published."""
+        if self._ckpt is not None:
+            self._ckpt.wait()
+
+    def restore(self) -> int:
+        """Roll the engine back to the latest snapshot — or, with none on
+        disk yet, to its construction-time weights (construction is the
+        implicit step-0 commit point). Restores the weights and the
+        persistent counters, then drops every live/pending stream
+        (``pool.clear()``): their partial progress was computed at
+        weights that no longer exist, so the §5.5 contract is
+        restore-and-replay — the driver (:func:`serve_resilient`)
+        resubmits every stream not committed by the restored snapshot,
+        from its beginning. Returns the restored step id.
+        """
+        if self._ckpt is None:
+            raise ValueError(
+                "restore() needs checkpoint_dir and checkpoint_every > 0")
+        self.checkpoint_wait()
+        step = CKPT.latest_step(self._ckpt.dir)
+        if step is None:
+            self.params = self._place_params(self._params_host0)
+            self.step_id = 0
+            self.n_stdp_updates = 0
+        else:
+            template = {
+                "params": tuple(self.params),
+                "counters": np.zeros(2, np.int32),
+            }
+            state = CKPT.restore_checkpoint(self._ckpt.dir, template, step)
+            self.params = tuple(state["params"])
+            counters = np.asarray(state["counters"])
+            self.step_id = int(counters[0])
+            self.n_stdp_updates = int(counters[1])
+        self.pool.clear()
+        self.learning_paused = False
+        self._last_step_s = 0.0
+        self.n_restores += 1
+        return self.step_id
 
     def _on_admit(self, idx: int, entry: slots.SlotEntry) -> None:
         """Pool lifecycle hook: initialise the slot's per-layer recurrent
@@ -415,7 +657,12 @@ class TNNEngine:
         s = int(active.sum(axis=-1).max()) if active.size else 0
         return compaction.bucket_width(s)
 
-    def _fwd_for(self, engine: str, first_width: Optional[int] = None):
+    def _fwd_for(
+        self,
+        engine: str,
+        first_width: Optional[int] = None,
+        learn: bool = False,
+    ):
         """jit ``network.forward`` step for a density-resolved engine.
 
         The default resolution uses the compiled ``self._fwd``; any other
@@ -429,10 +676,16 @@ class TNNEngine:
         and capped overall: the variants live in an LRU of
         ``scfg.max_jit_variants`` entries — an over-cap compile drops the
         least recently used executable (``stats()['jit_evictions']``).
+
+        ``learn=True`` selects the STDP step (``_forward_fn(..., learn)``:
+        forward + weight update, weights as explicit jit state). Learning
+        variants share the same LRU, keyed ``(engine, width, learn)`` —
+        at most double the variant population, same cap, and the weight
+        update itself never forces a compile (weights are arguments).
         """
-        if engine == self._default_engine and first_width is None:
+        if engine == self._default_engine and first_width is None and not learn:
             return self._fwd
-        key = (engine, first_width)
+        key = (engine, first_width, learn)
         if key in self._fwd_alt:
             self._fwd_alt.move_to_end(key)
             return self._fwd_alt[key]
@@ -452,7 +705,7 @@ class TNNEngine:
                 )
             )
         pinned = network.make_network(layers)
-        fwd = jax.jit(self._forward_fn(pinned))
+        fwd = jax.jit(self._forward_fn(pinned, learn=learn))
         self._fwd_alt[key] = fwd
         while len(self._fwd_alt) > self.scfg.max_jit_variants:
             self._fwd_alt.popitem(last=False)
@@ -513,9 +766,26 @@ class TNNEngine:
             # measured from this batch's own receptive-field view (exact,
             # never drops)
             width = self._layer0_width(batch) if engine in SPARSE_ENGINES else None
-            out_dev, carry_dev = self._fwd_for(engine, width)(
-                self.params, self._place(batch), self._place_carry(carry_np)
-            )
+            if self._learn_gate():
+                # STDP step: outputs at the pre-update weights (bit-exact
+                # with the inference path), new weights advance the
+                # engine's explicit state — no recompile, and under a
+                # mesh the update stays column-sharded (layer_step pins
+                # it via specs.tnn_param_axes)
+                out_dev, carry_dev, new_params = self._fwd_for(
+                    engine, width, learn=True
+                )(
+                    self.params,
+                    self._place(batch),
+                    self._place_carry(carry_np),
+                    self._stdp_key(),
+                )
+                self.params = new_params
+                self.n_stdp_updates += 1
+            else:
+                out_dev, carry_dev = self._fwd_for(engine, width)(
+                    self.params, self._place(batch), self._place_carry(carry_np)
+                )
             out = np.asarray(out_dev)
             carry_out = tuple(
                 None if c is None else np.asarray(c) for c in carry_dev
@@ -547,7 +817,15 @@ class TNNEngine:
                 retired.append(req)
         self.n_steps += 1
         self.n_volleys += len(live)
-        self._run_s += time.perf_counter() - t0
+        # persistent counter + snapshot cadence: step_id advances AFTER
+        # the step's retirements, so a snapshot at step s commits every
+        # stream retired at-or-before s (the serve_resilient commit rule);
+        # advancing first also keeps maybe_save from firing at step 0
+        self.step_id += 1
+        self._maybe_snapshot()
+        dt = time.perf_counter() - t0
+        self._last_step_s = dt
+        self._run_s += dt
         return retired
 
     def run(self) -> List[TNNRequest]:
@@ -588,6 +866,23 @@ class TNNEngine:
         # default compiled step is pinned outside the cache)
         out["jit_variants"] = float(len(self._fwd_alt))
         out["jit_evictions"] = float(self._jit_evictions)
+        # §5.5 learning + durability counters (step_id is the persistent
+        # counter snapshots carry; n_steps above is the resettable stat)
+        out["step_id"] = float(self.step_id)
+        out["n_stdp_updates"] = float(self.n_stdp_updates)
+        out["n_snapshots"] = float(self.n_snapshots)
+        out["n_restores"] = float(self.n_restores)
+        out["learning_paused"] = float(self.learning_paused)
+        out["n_learn_pauses"] = float(self.n_learn_pauses)
+        if self.scfg.learn:
+            # per-layer L2 drift vs the weights this instance came up with
+            # (post-resume) — how far live traffic has moved each stack
+            for i, (p, p0) in enumerate(zip(self.params, self._params_host0)):
+                out[f"weight_drift_l{i}"] = float(
+                    np.linalg.norm(
+                        np.asarray(p, np.float64) - np.asarray(p0, np.float64)
+                    )
+                )
         out.update(slots.latency_summary(self._retired))
         return out
 
@@ -600,16 +895,52 @@ class AsyncTNNEngine:
     retires. The step itself is synchronous compute (one jit call), so the
     pump yields control between steps — admission stays continuous under
     concurrent submission bursts.
+
+    Admission rejections (``max_pending`` hit — :class:`slots.QueueFull`)
+    are absorbed by a bounded retry: the submitter backs off
+    ``submit_retry_delay_s`` (with the pump kept running, so each backoff
+    gives the engine a chance to drain the queue) up to ``submit_retries``
+    times before the exception surfaces to the caller. A transient burst
+    rides through; sustained overload still fails fast.
     """
 
-    def __init__(self, engine: TNNEngine):
+    def __init__(
+        self,
+        engine: TNNEngine,
+        *,
+        submit_retries: int = 3,
+        submit_retry_delay_s: float = 0.02,
+    ):
+        if submit_retries < 0:
+            raise ValueError(f"submit_retries must be >= 0, got {submit_retries}")
+        if submit_retry_delay_s < 0:
+            raise ValueError(
+                f"submit_retry_delay_s must be >= 0, got {submit_retry_delay_s}"
+            )
         self.engine = engine
+        self.submit_retries = submit_retries
+        self.submit_retry_delay_s = submit_retry_delay_s
         self._futures: Dict[int, asyncio.Future] = {}
         self._pump_task: Optional[asyncio.Task] = None
 
     async def submit(self, volleys: np.ndarray) -> np.ndarray:
-        """Submit one stream; resolves to its (n_cycles, C, Q) output."""
-        req = self.engine.submit(volleys)
+        """Submit one stream; resolves to its (n_cycles, C, Q) output.
+
+        A full pending queue is retried ``submit_retries`` times with
+        ``submit_retry_delay_s`` backoff; :class:`slots.QueueFull`
+        propagates once the budget is spent (each rejected attempt still
+        counts in ``stats()['n_rejected']``)."""
+        for attempt in range(self.submit_retries + 1):
+            try:
+                req = self.engine.submit(volleys)
+                break
+            except slots.QueueFull:
+                if attempt == self.submit_retries:
+                    raise
+                # keep the pump stepping so the queue can actually drain
+                # while this submitter backs off
+                self._ensure_pump()
+                await asyncio.sleep(self.submit_retry_delay_s)
         fut = asyncio.get_running_loop().create_future()
         self._futures[req.req_id] = fut
         self._ensure_pump()
@@ -637,6 +968,105 @@ class AsyncTNNEngine:
                 if not fut.done():
                     fut.set_exception(exc)
             self._futures.clear()
+
+
+def serve_resilient(
+    engine: TNNEngine,
+    streams: Sequence[np.ndarray],
+    *,
+    failure_injector: Optional[callable] = None,
+    max_restarts: int = 3,
+    monitor: Optional[fault_tolerance.HeartbeatMonitor] = None,
+) -> Tuple[List[np.ndarray], dict]:
+    """Crash-survivable batch serving: the ``run_resilient`` idiom for the
+    serve path (DESIGN.md §5.5).
+
+    Feeds ``streams`` through the engine (incrementally, so a bounded
+    pending queue never rejects the batch), stepping until everything
+    retires. ``failure_injector(step_id)`` may raise
+    :class:`~repro.train.fault_tolerance.WorkerFailure` to simulate a node
+    loss mid-serve; on failure the driver rolls the engine back to its
+    latest snapshot (:meth:`TNNEngine.restore` — weights + persistent
+    counters, pool cleared) and replays every stream **not committed** by
+    that snapshot from its beginning. A snapshot at step ``s`` commits
+    exactly the streams retired at-or-before ``s`` (``step_id`` advances
+    after a step's retirements, before its snapshot), so the contract is
+    exactly-once per retired stream: committed results are never
+    recomputed, uncommitted streams are resubmitted whole. With learning
+    off, replayed outputs are bit-exact with the uninterrupted run (slot
+    outputs are batch-composition-invariant); with learning on, the
+    deterministic STDP rule + restored counters make the replayed weight
+    trajectory identical from the snapshot forward.
+
+    Each step beats ``monitor`` (host 0) with its wall-clock when one is
+    given. Returns ``(results, report)``: results in submission order,
+    report with ``restarts``, ``failed_hosts``, ``restored_steps``, and
+    ``resubmitted`` (one list of stream indices per restore). Re-raises
+    the failure once ``max_restarts`` is exhausted.
+    """
+    n = len(streams)
+    results: List[Optional[np.ndarray]] = [None] * n
+    retired_step: List[Optional[int]] = [None] * n
+    report = {
+        "restarts": 0,
+        "failed_hosts": [],
+        "restored_steps": [],
+        "resubmitted": [],
+    }
+    todo = collections.deque(range(n))
+    inflight: Dict[int, int] = {}
+    restarts = 0
+
+    def _feed() -> None:
+        # fill the queue as far as admission control allows; the rest
+        # waits in `todo` for freed capacity
+        while todo:
+            try:
+                req = engine.submit(streams[todo[0]])
+            except slots.QueueFull:
+                break
+            inflight[req.req_id] = todo.popleft()
+
+    while True:
+        try:
+            _feed()
+            while inflight or todo or engine.pool.has_work:
+                t0 = time.perf_counter()
+                if failure_injector is not None:
+                    failure_injector(engine.step_id)
+                for req in engine.step():
+                    i = inflight.pop(req.req_id, None)
+                    if i is None:
+                        continue  # not ours (caller pre-submitted work)
+                    results[i] = req.result()
+                    retired_step[i] = engine.step_id
+                if monitor is not None:
+                    monitor.beat(0, time.perf_counter() - t0)
+                _feed()
+            engine.checkpoint_wait()
+            return results, report
+        except fault_tolerance.WorkerFailure as f:
+            restarts += 1
+            report["restarts"] = restarts
+            report["failed_hosts"].append(f.host_id)
+            if restarts > max_restarts:
+                raise
+            s = engine.restore()
+            report["restored_steps"].append(s)
+            # roll back everything the restored snapshot didn't commit:
+            # results recorded after step s are stale (computed at weights
+            # that no longer exist) — drop them and replay those streams
+            inflight.clear()
+            replay = [
+                i
+                for i in range(n)
+                if retired_step[i] is None or retired_step[i] > s
+            ]
+            for i in replay:
+                results[i] = None
+                retired_step[i] = None
+            todo = collections.deque(replay)
+            report["resubmitted"].append(replay)
 
 
 def reference_outputs(

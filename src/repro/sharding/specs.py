@@ -300,6 +300,16 @@ def tnn_param_pspec(mesh: Mesh, n_columns: int) -> P:
     return P(_fit(mesh, n_columns, TNN_COLUMN_AXIS), None, None)
 
 
+def tnn_param_axes() -> tuple:
+    """``maybe_wsc`` axis entries for a (C, Q, rf) weight stack — the
+    in-jit twin of :func:`tnn_param_pspec` (same rule, ``ambient_fit``
+    fallback per dim). The STDP update path (``layer_step``) pins its new
+    weights with this, so a learning step's output params land exactly
+    where :func:`tnn_param_pspec` placed the input params and a
+    learn-while-serving engine never reshards weights between steps."""
+    return (TNN_COLUMN_AXIS, None, None)
+
+
 def tnn_volley_axes() -> tuple:
     """``maybe_wsc`` axis entries for column-stacked volley tensors
     ``(C, B, ...)`` — the single encoding of the post-gather rule; the

@@ -38,6 +38,16 @@ def _flatten(tree) -> dict:
 
 def save_checkpoint(ckpt_dir: str | pathlib.Path, step: int, state: Any,
                     host_id: int = 0) -> pathlib.Path:
+    """Save one host's shards for ``step``; safe under concurrent hosts.
+
+    Each host stages into its own ``.tmp_step_<n>_<host>`` dir and then
+    publishes. The first host to publish renames the whole tmp dir into
+    place (atomic); later hosts MERGE their ``host_<i>/`` shard dir into
+    the already-published step dir instead of clobbering it — rmtree'ing
+    an existing step here would delete the shards every other host already
+    wrote for the same step (the multi-host publish race). A host
+    re-saving the same step replaces only its own shard dir.
+    """
     ckpt_dir = pathlib.Path(ckpt_dir)
     final = ckpt_dir / f"step_{step:08d}"
     tmp = ckpt_dir / f".tmp_step_{step:08d}_{host_id}"
@@ -52,9 +62,26 @@ def save_checkpoint(ckpt_dir: str | pathlib.Path, step: int, state: Any,
                  for k, v in flat.items()},
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)          # atomic publish
+    if not final.exists():
+        try:
+            tmp.rename(final)          # atomic publish (first host wins)
+            return final
+        except OSError:
+            pass                       # another host published first: merge
+    # merge: move this host's shard dir into the published step (atomic
+    # per-host rename), then fold its keys into the shared manifest
+    host_dir = final / f"host_{host_id}"
+    if host_dir.exists():              # same host re-saving this step
+        shutil.rmtree(host_dir)
+    (tmp / f"host_{host_id}").rename(host_dir)
+    man_path = final / "manifest.json"
+    try:
+        merged = json.loads(man_path.read_text())
+    except (OSError, json.JSONDecodeError):
+        merged = {"step": int(step), "time": manifest["time"], "keys": {}}
+    merged["keys"].update(manifest["keys"])
+    man_path.write_text(json.dumps(merged))
+    shutil.rmtree(tmp, ignore_errors=True)
     return final
 
 

@@ -56,6 +56,10 @@ class HeartbeatMonitor:
              now: Optional[float] = None) -> None:
         st = self.hosts[host_id]
         st.last_seen = now if now is not None else time.time()
+        # a beat is proof of life: a host declared dead by dead_hosts()
+        # that recovers and resumes beating re-enters the straggler and
+        # fleet-median accounting (alive=False is not a tombstone)
+        st.alive = True
         st.step_times.append(step_time_s)
         del st.step_times[:-self.window]
 

@@ -1,0 +1,183 @@
+"""Durability regressions: checkpoint atomicity + multi-host publish,
+dtype round-trips, heartbeat revival, resilient-loop replay accounting.
+
+The crash-recovery contract the serve path (DESIGN.md §5.5) builds on is
+pinned here at the primitive level: an interrupted save must never corrupt
+the previous snapshot, concurrent hosts must never clobber each other's
+shards, and a host that resumes beating must re-enter the fleet.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as CK
+from repro.train import fault_tolerance as FT
+
+
+# ------------------------------------------------- heartbeat revival
+def test_beat_revives_dead_host():
+    """Regression: a host declared dead that resumes beating must come
+    back alive — ``beat`` is proof of life, not a no-op on tombstones.
+    (Previously ``alive=False`` was sticky: a transiently-partitioned
+    host kept beating but stayed out of the straggler/median accounting
+    and could never be declared dead *again*.)"""
+    mon = FT.HeartbeatMonitor(2, timeout_s=10)
+    now = 1000.0
+    mon.beat(0, 1.0, now=now)
+    mon.beat(1, 1.0, now=now)
+    assert mon.dead_hosts(now=now + 100) == [0, 1]
+    assert not mon.hosts[0].alive
+    # host 0 recovers and beats again
+    mon.beat(0, 1.0, now=now + 101)
+    assert mon.hosts[0].alive
+    # ...so it re-enters liveness accounting: silent again -> dead again
+    assert mon.dead_hosts(now=now + 300) == [0]
+
+
+def test_revived_host_rejoins_straggler_accounting():
+    mon = FT.HeartbeatMonitor(3, timeout_s=10, straggler_factor=1.5,
+                              window=8)
+    now = 0.0
+    for i in range(8):
+        for h in range(3):
+            mon.beat(h, 1.0, now=now + i)
+    assert mon.dead_hosts(now=now + 100) == [0, 1, 2]
+    # all revive; host 2 comes back slow -> flagged as straggler again
+    for i in range(8):
+        mon.beat(0, 1.0, now=now + 101 + i)
+        mon.beat(1, 1.0, now=now + 101 + i)
+        mon.beat(2, 5.0, now=now + 101 + i)
+    assert mon.stragglers() == [2]
+
+
+# --------------------------------------- multi-host checkpoint publish
+def test_two_host_save_merges_instead_of_clobbering(tmp_path):
+    """Regression: the second host publishing the same step must MERGE its
+    ``host_<i>/`` shard dir into the already-published step, not rmtree
+    the first host's shards away (the multi-host publish race)."""
+    s0 = {"w": np.arange(4.0, dtype=np.float32)}
+    s1 = {"w": np.arange(4.0, 8.0, dtype=np.float32)}
+    CK.save_checkpoint(tmp_path, 3, s0, host_id=0)
+    CK.save_checkpoint(tmp_path, 3, s1, host_id=1)
+    step_dir = tmp_path / "step_00000003"
+    assert (step_dir / "host_0" / "arrays.npz").exists()
+    assert (step_dir / "host_1" / "arrays.npz").exists()
+    # both hosts restore their own shards
+    r0 = CK.restore_checkpoint(tmp_path, s0, 3, host_id=0)
+    r1 = CK.restore_checkpoint(tmp_path, s1, 3, host_id=1)
+    np.testing.assert_array_equal(np.asarray(r0["w"]), s0["w"])
+    np.testing.assert_array_equal(np.asarray(r1["w"]), s1["w"])
+    # the manifest holds the union of both hosts' keys
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    assert manifest["step"] == 3
+    assert "w" in manifest["keys"]
+    # no tmp staging dirs left behind
+    assert not list(tmp_path.glob(".tmp_step_*"))
+
+
+def test_same_host_resave_replaces_own_shards(tmp_path):
+    CK.save_checkpoint(tmp_path, 1, {"w": np.zeros(2, np.float32)}, host_id=0)
+    CK.save_checkpoint(tmp_path, 1, {"w": np.ones(2, np.float32)}, host_id=0)
+    r = CK.restore_checkpoint(tmp_path, {"w": np.zeros(2, np.float32)}, 1)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.ones(2, np.float32))
+
+
+# ------------------------------------------------- atomic rotation
+def test_interrupted_save_never_corrupts_latest(tmp_path, monkeypatch):
+    """A save that dies mid-serialization leaves only a tmp dir; the
+    previous checkpoint stays the restorable latest (atomic publish)."""
+    state = {"w": np.arange(6.0, dtype=np.float32)}
+    CK.save_checkpoint(tmp_path, 1, state)
+    assert CK.latest_step(tmp_path) == 1
+
+    real_savez = np.savez
+
+    def dying_savez(path, **kw):
+        real_savez(path, **kw)
+        raise OSError("simulated crash mid-save")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(OSError):
+        CK.save_checkpoint(tmp_path, 2, {"w": state["w"] + 1})
+    monkeypatch.undo()
+    # step 2 never published: latest is still step 1, and it restores
+    assert CK.latest_step(tmp_path) == 1
+    r = CK.restore_checkpoint(tmp_path, state)
+    np.testing.assert_array_equal(np.asarray(r["w"]), state["w"])
+
+
+# ------------------------------------------------- dtype round-trips
+@pytest.mark.parametrize("dtype", ["float32", "int32", "bfloat16"])
+def test_checkpoint_dtype_roundtrip(tmp_path, dtype):
+    """bfloat16 can't live in an npz (void16): it's stored widened to
+    float32 and restored back through the template's dtype."""
+    x = jnp.linspace(-2.0, 2.0, 8).astype(dtype)
+    CK.save_checkpoint(tmp_path, 1, {"x": x})
+    r = CK.restore_checkpoint(tmp_path, {"x": x})
+    assert r["x"].dtype == x.dtype
+    np.testing.assert_array_equal(
+        np.asarray(x.astype("float32")), np.asarray(r["x"].astype("float32")))
+
+
+# --------------------------------------------- resilient-loop replay
+def test_run_resilient_skips_committed_steps(tmp_path):
+    """After a failure the loop resumes from the last checkpoint: steps
+    at-or-before it are never re-executed (exactly-once per committed
+    step), steps after it are replayed."""
+    mgr = CK.CheckpointManager(tmp_path, keep=10, every=2)
+    executed = []
+
+    def step(state, batch):
+        executed.append(batch)
+        return {"x": state["x"] + batch}, {}
+
+    def injector(i, fired=[False]):
+        if i == 5 and not fired[0]:
+            fired[0] = True
+            raise FT.WorkerFailure(1, "(injected)")
+
+    state0 = {"x": np.zeros((), np.float32)}
+    final, report = FT.run_resilient(
+        step, state0, list(range(8)), ckpt_mgr=mgr,
+        failure_injector=injector)
+    assert report["restarts"] == 1 and report["failed_hosts"] == [1]
+    assert report["completed_steps"] == 8
+    # the failure hit before batch 5 ran; the checkpoint commits steps
+    # 0..3, so batch 4 (uncommitted) replays and 0..3 never re-execute
+    assert executed == [0, 1, 2, 3, 4, 4, 5, 6, 7]
+    assert float(np.asarray(final["x"])) == float(sum(range(8)))
+
+
+def test_run_resilient_exhausts_restarts(tmp_path):
+    mgr = CK.CheckpointManager(tmp_path, keep=3, every=2)
+
+    def injector(i):
+        raise FT.WorkerFailure(0, "(always failing)")
+
+    with pytest.raises(FT.WorkerFailure):
+        FT.run_resilient(
+            lambda s, b: (s, {}), {"x": np.zeros(1)}, list(range(4)),
+            ckpt_mgr=mgr, failure_injector=injector, max_restarts=2)
+
+
+# ------------------------------------------------- elastic planner
+def test_elastic_planner_plan_shapes():
+    pl = FT.ElasticPlanner(chips_per_host=4, model_parallel=8)
+    full = pl.plan(surviving_hosts=16)           # 64 chips
+    assert (full.pod, full.data, full.model) == (1, 8, 8)
+    assert full.chips == 64
+    # losing hosts shrinks ONLY the data axis, to a power of two
+    degraded = pl.plan(surviving_hosts=13)       # 52 chips
+    assert degraded.model == 8
+    assert degraded.data == 4
+    assert degraded.chips <= 52
+    # multi-pod split divides chips per pod first
+    pods = pl.plan(surviving_hosts=16, pods=2)
+    assert pods.pod == 2 and pods.model == 8
+    assert pods.data == 4
+    # never below one data replica
+    tiny = pl.plan(surviving_hosts=1)
+    assert tiny.data == 1 and tiny.model == 8

@@ -216,6 +216,63 @@ def test_async_pump_failure_rejects_waiting_clients():
         asyncio.run(client())
 
 
+def test_async_submit_retries_transient_queue_full():
+    """Concurrent submitters over a tiny pending queue: without retry the
+    burst rejects deterministically; with the bounded retry every client
+    rides through (the pump drains the queue between backoffs) and the
+    results stay bit-exact."""
+    net = _small_net()
+    params = _params(net)
+    streams = _streams(net, 6, seed=21)
+    expected = tnn_engine.TNNEngine(
+        params, net, tnn_engine.TNNServeConfig(
+            n_slots=2, backend="closed_form")).serve(streams)
+
+    def make(retries):
+        eng = tnn_engine.TNNEngine(
+            params, net, tnn_engine.TNNServeConfig(
+                n_slots=2, backend="closed_form", max_pending=1))
+        return tnn_engine.AsyncTNNEngine(
+            eng, submit_retries=retries, submit_retry_delay_s=0.001)
+
+    async def burst(aeng):
+        return await asyncio.gather(*[aeng.submit(s) for s in streams])
+
+    # retry disabled: the second submitter hits the full queue before any
+    # step can drain it
+    with pytest.raises(tnn_engine.slots.QueueFull):
+        asyncio.run(burst(make(retries=0)))
+    # bounded retry absorbs the burst
+    got = asyncio.run(burst(make(retries=50)))
+    for e, g in zip(expected, got):
+        np.testing.assert_array_equal(e, g)
+
+
+def test_async_submit_raises_after_retry_budget():
+    """A queue that never drains must still surface QueueFull once the
+    retry budget is spent — bounded, not infinite, patience."""
+    net = _small_net()
+    eng = tnn_engine.TNNEngine(
+        _params(net), net, tnn_engine.TNNServeConfig(
+            n_slots=1, backend="closed_form", max_pending=1))
+    eng.submit(_streams(net, 1)[0])        # queue is now full
+    eng.step = lambda: []                  # engine makes no progress
+    aeng = tnn_engine.AsyncTNNEngine(
+        eng, submit_retries=2, submit_retry_delay_s=0.001)
+
+    async def client():
+        return await aeng.submit(_streams(net, 1, seed=8)[0])
+
+    with pytest.raises(tnn_engine.slots.QueueFull):
+        asyncio.run(client())
+    # every attempt (initial + 2 retries) counted as a rejection
+    assert eng.pool.n_rejected == 3
+    with pytest.raises(ValueError):
+        tnn_engine.AsyncTNNEngine(eng, submit_retries=-1)
+    with pytest.raises(ValueError):
+        tnn_engine.AsyncTNNEngine(eng, submit_retry_delay_s=-0.1)
+
+
 def test_reset_stats_keeps_pending_work():
     net = _small_net()
     eng = tnn_engine.TNNEngine(
@@ -284,11 +341,11 @@ def test_jit_variant_cache_is_bounded_lru():
     st = eng.stats()
     assert st["jit_variants"] == 2.0
     assert st["jit_evictions"] == 1.0
-    assert ("event", 8) not in eng._fwd_alt
+    assert ("event", 8, False) not in eng._fwd_alt
     # a hit refreshes recency: ("event", 16) survives the next eviction
     eng._fwd_for("event", 16)
     eng._fwd_for("event", 32)                  # evicts ("scan", None)
-    assert set(eng._fwd_alt) == {("event", 16), ("event", 32)}
+    assert set(eng._fwd_alt) == {("event", 16, False), ("event", 32, False)}
     assert eng.stats()["jit_evictions"] == 2.0
     # the default compiled step is pinned outside the LRU
     assert eng._fwd_for(eng._default_engine) is eng._fwd

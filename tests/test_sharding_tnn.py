@@ -302,6 +302,93 @@ def test_sharded_recurrent_carry_bit_exact():
     """))
 
 
+def test_sharded_learn_while_serving_and_crash_recovery():
+    """Learn-while-serving on the (2, 4) mesh (DESIGN.md §5.5 + §6.4):
+    STDP updates stay column-sharded step after step (layer_step pins the
+    new stacks via specs.tnn_param_axes — no silent gather to one
+    device), the learned weights match the single-device learning engine,
+    and serve_resilient's restore-and-replay restores snapshots INTO the
+    mesh placement — outputs bit-exact vs the uninterrupted sharded run."""
+    print(_run("""
+        import tempfile
+        from jax.sharding import PartitionSpec as P
+        from repro.serve import tnn_engine
+        from repro.train import fault_tolerance as FT
+
+        streams = [v[:3], v[3:6], v[6:], v[1:2], v[4:6]]
+        scfg = lambda **kw: tnn_engine.TNNServeConfig(
+            n_slots=2, backend='closed_form', **kw)
+
+        # single-device learning reference
+        ref_eng = tnn_engine.TNNEngine(params, net, scfg(learn=True))
+        ref_res = ref_eng.serve(streams)
+
+        eng = tnn_engine.TNNEngine(params, net, scfg(learn=True),
+                                   mesh=mesh)
+        results = eng.serve(streams)
+        assert eng.n_stdp_updates == eng.n_steps > 0
+        # weight state is STILL column-sharded after every update
+        assert eng.params[0].sharding.spec == P('column', None, None)
+        assert eng.params[1].sharding.spec == P('column', None, None)
+        for a, b in zip(results, ref_res):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(eng.params, ref_eng.params):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+        # crash recovery under the mesh: learning-off outputs bit-exact,
+        # snapshots restore into the sharded placement
+        ref_off = tnn_engine.TNNEngine(params, net, scfg(),
+                                       mesh=mesh).serve(streams)
+        with tempfile.TemporaryDirectory() as d:
+            eng2 = tnn_engine.TNNEngine(
+                params, net,
+                scfg(checkpoint_dir=d, checkpoint_every=2,
+                     checkpoint_keep=100, checkpoint_async=False),
+                mesh=mesh)
+            def boom(step_id, fired=[False]):
+                if step_id >= 3 and not fired[0]:
+                    fired[0] = True
+                    raise FT.WorkerFailure(5, '(injected)')
+            r2, report = tnn_engine.serve_resilient(
+                eng2, streams, failure_injector=boom)
+            assert report['restarts'] == 1 and eng2.n_restores == 1
+            assert eng2.params[0].sharding.spec == P('column', None, None)
+            for a, b in zip(r2, ref_off):
+                np.testing.assert_array_equal(a, b)
+
+            # learning on: restored run == deterministic replay from the
+            # snapshot step, still sharded
+            with tempfile.TemporaryDirectory() as d2:
+                eng3 = tnn_engine.TNNEngine(
+                    params, net,
+                    scfg(learn=True, checkpoint_dir=d2, checkpoint_every=2,
+                         checkpoint_keep=100, checkpoint_async=False),
+                    mesh=mesh)
+                def boom2(step_id, fired=[False]):
+                    if step_id >= 3 and not fired[0]:
+                        fired[0] = True
+                        raise FT.WorkerFailure(6, '(injected)')
+                r3, rep3 = tnn_engine.serve_resilient(
+                    eng3, streams, failure_injector=boom2)
+                from repro.train import checkpoint as CKPT
+                s = rep3['restored_steps'][0]
+                snap = CKPT.restore_checkpoint(
+                    d2,
+                    {'params': tuple(eng3.params),
+                     'counters': np.zeros(2, np.int32)}, s)
+                eng4 = tnn_engine.TNNEngine(snap['params'], net,
+                                            scfg(learn=True), mesh=mesh)
+                eng4.step_id = s
+                eng4.n_stdp_updates = int(np.asarray(snap['counters'])[1])
+                eng4.serve([streams[i] for i in rep3['resubmitted'][0]])
+                for a, b in zip(eng3.params, eng4.params):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+        print('SHARDED_LEARN_SERVE_OK')
+    """))
+
+
 def test_sharded_init_network_matches_unsharded():
     """init_network(mesh=...) is bit-identical to the unsharded init and
     places each layer under its column spec (replication when C doesn't

@@ -85,6 +85,40 @@ def test_bounded_queue_rejects_then_recovers():
     assert pool.n_submitted == 4 and pool.n_pending == 2
 
 
+def test_pending_occupancy_signal():
+    pool = SlotPool(1, _fake_clock(), max_pending=4)
+    assert pool.pending_occupancy == 0.0
+    pool.submit("a")
+    pool.submit("b")
+    assert pool.pending_occupancy == 0.5
+    pool.admit()                                # one admitted, one queued
+    assert pool.pending_occupancy == 0.25
+    # unbounded queues report no pressure (nothing to measure against)
+    free = SlotPool(1, _fake_clock())
+    free.submit("x")
+    assert free.pending_occupancy == 0.0
+
+
+def test_clear_drops_live_and_pending_without_retiring():
+    """The crash-recovery primitive: clear() empties the pool (live AND
+    queued) and hands the dropped entries back, but the history counters
+    keep describing everything that ever flowed through — a dropped
+    entry is NOT a retirement."""
+    pool = SlotPool(2, _fake_clock(), max_pending=8)
+    for name in "abcde":
+        pool.submit(name)
+    pool.admit()
+    pool.retire(0)                              # "a" retires normally
+    dropped = pool.clear()
+    assert [e.item for e in dropped] == ["b", "c", "d", "e"]
+    assert not pool.has_work
+    assert pool.pending_occupancy == 0.0
+    assert pool.n_submitted == 5 and pool.n_retired == 1
+    # the pool serves normally after the wipe (replay path)
+    pool.submit("b")
+    assert [(i, e.item) for i, e in pool.admit()] == [(0, "b")]
+
+
 # ------------------------------------------------------------ properties
 @settings(max_examples=60, deadline=None)
 @given(st.integers(1, 5), st.lists(st.integers(1, 9), min_size=1,
