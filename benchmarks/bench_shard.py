@@ -46,7 +46,8 @@ import argparse
 import dataclasses
 import os
 
-# must precede ANY jax import (benchmarks.common imports jax too)
+# must precede ANY jax import (benchmarks.common imports jax too); a raw
+# write is the only option this early  # repro-lint: allow[raw-env]
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 

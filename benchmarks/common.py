@@ -73,8 +73,10 @@ def emit(name: str, us_per_call, derived: str = "", **extra) -> None:
 
 
 def smoke_mode() -> bool:
-    """True when benches should run tiny (CI smoke job)."""
-    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+    """True when benches should run tiny (CI smoke job). Strict 0/1
+    parse: a typo'd value raises instead of silently going full-size."""
+    from repro.kernels import common as _kcommon
+    return _kcommon.env_flag("REPRO_BENCH_SMOKE", default=False)
 
 
 def reset_results() -> None:
@@ -94,6 +96,7 @@ def write_json(bench: str, out_dir: str = None, smoke: bool = None) -> str:
     :func:`reset_results` up front so earlier same-process sections don't
     contaminate their artifact. Returns the path written.
     """
+    # free-form output path, not a parsed knob  # repro-lint: allow[raw-env]
     out_dir = out_dir or os.environ.get("REPRO_BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{bench}.json")

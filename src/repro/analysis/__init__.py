@@ -1,0 +1,15 @@
+"""Project-specific analysis subsystem (DESIGN.md §7).
+
+Three layers, importable independently:
+
+  * :mod:`repro.analysis.lint` — AST-based static rules (``repro-lint``).
+    Deliberately jax-free so ``python -m repro.analysis.lint`` fast-fails
+    in CI without paying jax import/compile time.
+  * :mod:`repro.analysis.layout_audit` — runtime sharding-layout auditor:
+    runs forward/step/pipelined under the 2x4 host mesh and diffs every
+    ``maybe_wsc``-pinned intermediate's actual PartitionSpec against the
+    declared rules in :mod:`repro.sharding.specs`.
+  * :mod:`repro.analysis.contracts` — runtime contract guards:
+    ``assert_max_compiles(n)`` (jax.monitoring compile events) and a
+    tracer-leak canary, exposed as pytest fixtures.
+"""

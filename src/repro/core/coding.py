@@ -100,6 +100,7 @@ def rnl_response(w: jax.Array, t: jax.Array) -> jax.Array:
     return jnp.where(t < 0, 0, jnp.minimum(t + 1, w)).astype(jnp.int32)
 
 
+# repro-lint: unplaced (encoding primitive; consumers place their volleys)
 def rnl_response_bits(times: jax.Array, weights: jax.Array,
                       t_steps: int) -> jax.Array:
     """Per-cycle dendrite bits: line ``i`` is hot at tick ``t`` iff its RNL

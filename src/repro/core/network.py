@@ -331,6 +331,12 @@ def _forward_pipelined(params, x, cfg, carry_in, m, rows) -> ForwardResult:
     # (and carry blocks) ticks l .. l+M-1; outside is warmup/drain pad.
     out = ys_out[n_layers - 1:]
     out = out.reshape(m * rows, *out.shape[2:])[:b]
+    # re-pin after reassembling micro-batches: XLA does not carry the
+    # per-tick stage pins through the reshape, leaving the final (B, C, Q)
+    # volley batch-REPLICATED on a data-sharded mesh (caught by the §7.2
+    # layout auditor; identity without a mesh).
+    _dp, _col = sharding_specs.tnn_stage_axes()
+    out = sharding_specs.maybe_wsc(out, _dp, _col, None)
     winners = tuple(
         ys_win[i][i:i + m].reshape(m * rows, -1)[:b]
         for i in range(n_layers))

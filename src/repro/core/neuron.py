@@ -108,6 +108,7 @@ def _dendrite_increment(bits: jax.Array, cfg: NeuronConfig) -> jax.Array:
     raise ValueError(f"unknown dendrite {cfg.dendrite}")
 
 
+# repro-lint: unplaced (engine primitive; fire_times_bank pins the bank)
 def simulate_neuron(times: jax.Array, weights: jax.Array,
                     cfg: NeuronConfig) -> NeuronOutput:
     """Cycle-accurate simulation via lax.scan over ticks.
@@ -147,6 +148,7 @@ def simulate_neuron(times: jax.Array, weights: jax.Array,
                         clip_events=clip_events, axon_wave=axon)
 
 
+# repro-lint: unplaced (engine primitive; fire_times_bank pins the bank)
 def fire_time_closed_form(times: jax.Array, weights: jax.Array,
                           threshold: int, t_steps: int) -> jax.Array:
     """Vectorized exact fire time for the full-PC neuron (no scan).
@@ -166,6 +168,7 @@ def fire_time_closed_form(times: jax.Array, weights: jax.Array,
     return jnp.where(any_hit, first, coding.NO_SPIKE)
 
 
+# repro-lint: unplaced (engine primitive; fire_times_bank pins the bank)
 def fire_time_catwalk_closed_form(times: jax.Array, weights: jax.Array,
                                   threshold: int, t_steps: int,
                                   k: int) -> jax.Array:
@@ -186,6 +189,7 @@ def fire_time_catwalk_closed_form(times: jax.Array, weights: jax.Array,
     return jnp.where(any_hit, first, coding.NO_SPIKE)
 
 
+# repro-lint: unplaced (engine primitive; fire_times_bank pins the bank)
 def fire_times_event(times: jax.Array, weights: jax.Array, threshold: int,
                      t_steps: int, k: Optional[int] = None) -> jax.Array:
     """Event-driven exact fire time: sorted-breakpoint segment solve.
@@ -378,6 +382,7 @@ def resolve_backend(backend: Backend, density: Optional[float] = None,
     return "closed_form"
 
 
+# repro-lint: unplaced (shape normalization only; caller pins after)
 def _bank_shapes(times: jax.Array, weights: jax.Array):
     """Normalize to (times (..., B, n), weights (..., Q, n)) with matching
     leading (column) axes; 1-D inputs are promoted to singleton banks."""
@@ -548,6 +553,8 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
     raise ValueError(f"unknown backend {backend!r}")
 
 
+# compacted widths rarely divide the mesh; the consuming engines inherit
+# the pre-compaction placement  # repro-lint: unplaced
 def _compact_bank(times: jax.Array, weights: jax.Array, t_steps: int,
                   n_active_max: Optional[int], engine: str):
     """Shared compaction pre-pass for the sparse engines: relocate active

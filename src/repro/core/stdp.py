@@ -49,6 +49,7 @@ def _stabilizer(w: jax.Array, cfg: STDPConfig) -> jax.Array:
     return jnp.maximum(4.0 * u * (1.0 - u), cfg.stab_floor)
 
 
+# repro-lint: unplaced (per-neuron rule; layer_step pins the vmapped stack)
 def stdp_delta(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
                cfg: STDPConfig, key: Optional[jax.Array] = None) -> jax.Array:
     """Raw (unclipped) STDP weight delta for one neuron.
@@ -83,6 +84,7 @@ def stdp_delta(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
             - ghost * cfg.mu_backoff * b)
 
 
+# repro-lint: unplaced (per-neuron rule; layer_step pins the vmapped stack)
 def stdp_update(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
                 cfg: STDPConfig, key: Optional[jax.Array] = None) -> jax.Array:
     """One STDP step for one neuron (see :func:`stdp_delta` for args).
@@ -94,6 +96,7 @@ def stdp_update(weights: jax.Array, in_times: jax.Array, out_time: jax.Array,
                     0.0, float(cfg.w_max))
 
 
+# repro-lint: unplaced (per-column rule; layer_step pins the vmapped stack)
 def stdp_update_column(weights: jax.Array, in_times: jax.Array,
                        out_times: jax.Array, winner: jax.Array,
                        cfg: STDPConfig,
@@ -124,6 +127,7 @@ def stdp_update_column(weights: jax.Array, in_times: jax.Array,
     return jax.vmap(one)(idxs, weights, out_times, keys)
 
 
+# repro-lint: unplaced (per-column rule; layer_step pins the vmapped stack)
 def stdp_update_column_minibatch(weights: jax.Array, in_times: jax.Array,
                                  out_times: jax.Array, winner: jax.Array,
                                  cfg: STDPConfig,

@@ -9,10 +9,10 @@ SPMD-partitioned across a mesh).
 
 from __future__ import annotations
 
-import os
 from typing import Literal
 
 
+from repro.kernels import common as _common
 from repro.kernels import moe_gate as _moe
 from repro.kernels import ref as _ref
 from repro.kernels import rnl_neuron as _rnl
@@ -23,7 +23,10 @@ Impl = Literal["pallas", "ref"]
 
 
 def default_impl() -> Impl:
-    return os.environ.get("REPRO_KERNEL_IMPL", "pallas")  # type: ignore
+    # strict parse: a typo'd REPRO_KERNEL_IMPL raises here instead of
+    # silently selecting whichever dispatch branch compares last
+    return _common.env_choice("REPRO_KERNEL_IMPL",
+                              ("pallas", "ref"), "pallas")  # type: ignore
 
 
 def unary_topk_relocate(bits, net, impl: Impl | None = None):

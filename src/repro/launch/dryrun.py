@@ -1,8 +1,10 @@
 import os
+# raw writes are the only option this early  # repro-lint: allow[raw-env]
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
 # ^ MUST precede every other import (jax locks device count on first init).
-os.environ.setdefault("REPRO_KERNEL_IMPL", "ref")   # pjit-partitionable path
+# pjit-partitionable path  # repro-lint: allow[raw-env]
+os.environ.setdefault("REPRO_KERNEL_IMPL", "ref")
 
 """Multi-pod dry-run: prove the distribution config is coherent.
 

@@ -89,6 +89,7 @@ import collections
 import contextlib
 import dataclasses
 import time
+import typing
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -253,6 +254,16 @@ class TNNEngine:
         resume: bool = False,
     ):
         scfg = scfg or TNNServeConfig()
+        # strict construction-time validation: a typo'd backend used to
+        # surface only deep inside fire_times_bank on the first step (or
+        # never, for a layer the density policy happened to re-pin)
+        valid = typing.get_args(neuron.Backend)
+        for name, where in [(scfg.backend, "TNNServeConfig.backend")] + [
+                (lc.backend, f"net.layers[{i}].backend")
+                for i, lc in enumerate(net.layers)]:
+            if name not in valid:
+                raise ValueError(
+                    f"{where}={name!r}: expected one of {valid}")
         if scfg.backend != "auto":
             # pin only the layers that delegated the choice: explicit
             # per-layer backends are respected (mirrors _fwd_for)

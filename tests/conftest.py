@@ -1,0 +1,11 @@
+"""Shared fixtures: the runtime contract guards (DESIGN.md §7.3).
+
+Importing the fixture functions registers them with pytest; tests take
+``max_compiles_guard`` / ``tracer_leak_check`` as arguments and wrap
+their steady-state sections (see tests/test_analysis_contracts.py).
+"""
+
+from repro.analysis.contracts import (  # noqa: F401
+    max_compiles_guard,
+    tracer_leak_check,
+)

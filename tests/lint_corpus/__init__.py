@@ -1,0 +1,7 @@
+"""Bad-example corpus for the repro-lint self-test (never imported).
+
+One file per rule; tests/test_analysis_lint.py asserts each rule fires
+on exactly its own file and nowhere else. The lint walker skips this
+directory (``SKIP_DIRS``) — corpus files are linted only when passed
+explicitly.
+"""

@@ -1,0 +1,9 @@
+"""RPR002: the deprecated network_forward* trio outside core/network.py."""
+
+
+def run_everything(params, cfg, volley, network):
+    out, winners = network.network_forward(params, volley, cfg)
+    out_p, _ = network.network_forward_pipelined(params, volley, cfg, 2)
+    out_d, _, dens = network.network_forward_with_densities(
+        params, volley, cfg)
+    return out, out_p, out_d, winners, dens

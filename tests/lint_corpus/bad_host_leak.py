@@ -1,0 +1,18 @@
+"""RPR003: host-side sync on a jit-traced value (taint walk)."""
+
+import functools
+
+import jax
+
+
+@jax.jit
+def casts_a_traced_value(volley):
+    density = float(volley.mean())          # host float() on a tracer
+    return volley * density
+
+
+@functools.partial(jax.jit, static_argnames=("t_steps",))
+def branches_on_a_traced_value(volley, t_steps):
+    if volley.sum() > t_steps:              # Python `if` on a tracer
+        return volley
+    return volley + 1

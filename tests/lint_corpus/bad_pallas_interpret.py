@@ -1,0 +1,12 @@
+"""RPR006: literal interpret= bypassing kernels/common.use_interpret."""
+
+from jax.experimental import pallas as pl
+
+
+def launch(kernel, times, n, out_shape):
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        out_shape=out_shape,
+        interpret=True,                      # baked-in literal
+    )(times)

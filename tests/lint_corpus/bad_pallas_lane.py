@@ -1,0 +1,9 @@
+"""RPR004: BlockSpec literal last dim off the 128 TPU lane quantum."""
+
+from jax.experimental import pallas as pl
+
+
+def make_specs(b_tile):
+    return [
+        pl.BlockSpec((b_tile, 100), lambda i: (i, 0)),   # 100 % 128 != 0
+    ]

@@ -1,0 +1,21 @@
+"""RPR005: SMEM scalar operand declared after the block specs."""
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def launch(kernel, times, t_hi, n, out_shape):
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((None, n), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # scalar AFTER blocks
+        ],
+        out_specs=pl.BlockSpec((None, n), lambda i: (i, 0)),
+        out_shape=out_shape,
+        interpret=common.use_interpret(),
+    )(times, t_hi)

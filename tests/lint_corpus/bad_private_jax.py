@@ -1,0 +1,9 @@
+"""RPR001: private jax access outside sharding/compat.py."""
+
+from jax._src.core import Tracer
+
+
+def is_tracer_the_wrong_way(value):
+    import jax
+
+    return isinstance(value, jax.core.Tracer) or isinstance(value, Tracer)

@@ -1,0 +1,9 @@
+"""RPR008: raw os.environ / os.getenv outside kernels/common.py."""
+
+import os
+
+
+def pick_impl():
+    if os.getenv("REPRO_KERNEL_IMPL"):
+        return os.environ["REPRO_KERNEL_IMPL"]
+    return os.environ.get("REPRO_DEFAULT_IMPL", "pallas")

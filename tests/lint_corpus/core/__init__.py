@@ -1,0 +1,1 @@
+"""Corpus subpackage with a ``core`` path component (RPR007 scope)."""

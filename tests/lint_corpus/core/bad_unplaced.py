@@ -1,0 +1,8 @@
+"""RPR007: core/ function on mesh-placed operands with no maybe_wsc."""
+
+import jax.numpy as jnp
+
+
+def evaluate_bank(weights, times, threshold):
+    pot = jnp.cumsum(times + weights, axis=-1)
+    return jnp.argmax(pot >= threshold, axis=-1)

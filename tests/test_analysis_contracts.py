@@ -1,0 +1,125 @@
+"""Contract guards (DESIGN.md §7.3): the compile counter sees real
+compiles and stays quiet on cache hits, the tracer canary catches
+captured tracers, and the serve/pipelined steady-state contracts hold —
+zero recompiles after warmup, weight VALUE changes included."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts
+from repro.core import coding, layer, network
+from repro.serve import tnn_engine
+
+NO_SPIKE = int(coding.NO_SPIKE)
+
+
+def _net(depth=2, backend="closed_form"):
+    layers = [layer.TNNLayer(n_columns=4, rf_size=4, n_neurons=4,
+                             threshold=5, t_steps=12, dendrite="catwalk",
+                             k=2, backend=backend)]
+    for _ in range(depth - 1):
+        prev = layers[-1]
+        layers.append(layer.TNNLayer(
+            n_columns=prev.n_outputs // 4, rf_size=4, n_neurons=4,
+            threshold=4, t_steps=12, dendrite="catwalk", k=2,
+            backend=backend))
+    return network.make_network(layers)
+
+
+def _volleys(seed, bsz, n, t_steps=12):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, 2 * t_steps, size=(bsz, n))
+    return np.where(t >= t_steps, NO_SPIKE, t).astype(np.int32)
+
+
+# ------------------------------------------------------ guard mechanics
+def test_guard_sees_a_fresh_compile():
+    contracts.install()
+    x = jnp.arange(16)
+    with pytest.raises(AssertionError, match="compile-count contract"):
+        with contracts.assert_max_compiles(0, "fresh"):
+            jax.jit(lambda v: v * 7 - 3)(x).block_until_ready()
+
+
+def test_guard_quiet_on_cache_hit(max_compiles_guard):
+    f = jax.jit(lambda v: v * 5 + 2)
+    x = jnp.arange(16)
+    f(x).block_until_ready()                      # warmup compile
+    with max_compiles_guard(0, "cached"):
+        for _ in range(3):
+            f(x).block_until_ready()
+
+
+def test_guard_reports_tally_and_label():
+    contracts.install()
+    with contracts.assert_max_compiles(10, "headroom") as tally:
+        jax.jit(lambda v: v + 11)(jnp.arange(4)).block_until_ready()
+    assert tally.count >= 1
+
+
+_CAPTURED = []
+
+
+def test_tracer_canary_catches_a_captured_tracer(tracer_leak_check):
+    def leaky(v):
+        _CAPTURED.append(v)                       # traced value escapes
+        return v * 2
+
+    try:
+        with pytest.raises(AssertionError, match="tracer-leak canary"):
+            with tracer_leak_check("leak"):
+                jax.jit(leaky)(jnp.arange(8)).block_until_ready()
+    finally:
+        _CAPTURED.clear()
+    with tracer_leak_check("clean"):
+        jax.jit(lambda v: v * 2)(jnp.arange(8)).block_until_ready()
+
+
+# -------------------------------------- steady-state serving contracts
+def test_serve_learn_50_steps_zero_recompiles():
+    """DESIGN.md §5.5 contract, measured at the real signal: a learn=True
+    engine mutates weights every step, yet after warmup a 50+-step run
+    performs ZERO backend compiles (value changes never retrace)."""
+    net = _net(depth=2)
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    eng = tnn_engine.TNNEngine(
+        params, net,
+        tnn_engine.TNNServeConfig(n_slots=2, backend="closed_form",
+                                  learn=True, stdp_every=1))
+    stream = _volleys(3, 30, net.n_inputs)        # 30 ticks per stream
+    for _ in range(4):
+        eng.submit(stream.copy())                 # 120 ticks / 2 slots
+    done = []
+    for _ in range(3):                            # warmup: variant compiles
+        done.extend(eng.step())
+    start = eng.step_id
+    with contracts.assert_max_compiles(0, "serve-learn steady state"):
+        while len(done) < 4:
+            done.extend(eng.step())
+    assert eng.step_id - start >= 50
+    assert len(done) == 4
+
+
+def test_pipelined_forward_zero_recompiles_on_weight_updates():
+    """Pipelined jit variants (M=1 and M=3) stay cached across weight
+    VALUE changes — only shapes/statics may retrace."""
+    net = _net(depth=2)
+    params = network.init_network(jax.random.PRNGKey(1), net)
+    v = jnp.asarray(_volleys(7, 6, net.n_inputs))
+    fns = {m: jax.jit(lambda p, x, m=m: network.forward(
+        p, x, net, microbatches=m).out) for m in (1, 3)}
+    for fn in fns.values():
+        fn(params, v).block_until_ready()         # warmup both variants
+    bumped = jax.tree_util.tree_map(lambda p: p + 1, params)
+    with contracts.assert_max_compiles(0, "pipelined steady state"):
+        for fn in fns.values():
+            a = fn(params, v)
+            b = fn(bumped, v)
+            a.block_until_ready()
+            b.block_until_ready()
+
+
+def test_cli_self_check():
+    assert contracts.main([]) == 0

@@ -207,12 +207,15 @@ def test_deprecated_wrappers_warn_and_match():
     v = jnp.asarray(_volley_seq(23, 1, 6, net.n_inputs)[0])
     ref = network.forward(params, v, net)
     with pytest.warns(_deprecation.ReproDeprecationWarning):
+        # the deprecation test itself  # repro-lint: allow[deprecated-forward]
         out, win = network.network_forward(params, v, net)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.out))
     with pytest.warns(_deprecation.ReproDeprecationWarning):
+        # the deprecation test itself  # repro-lint: allow[deprecated-forward]
         out_p, _ = network.network_forward_pipelined(params, v, net, 2)
     np.testing.assert_array_equal(np.asarray(out_p), np.asarray(ref.out))
     with pytest.warns(_deprecation.ReproDeprecationWarning):
+        # the deprecation test itself  # repro-lint: allow[deprecated-forward]
         out_d, _, dens = network.network_forward_with_densities(
             params, v, net)
     np.testing.assert_array_equal(np.asarray(out_d), np.asarray(ref.out))

@@ -20,6 +20,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 from repro.kernels import common
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
@@ -83,7 +85,19 @@ def test_use_interpret_explicit_override(monkeypatch):
     monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
     assert common.use_interpret() is False      # legacy alias honored
     # the new name wins when both are set
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert common.use_interpret() is True
+    # strict parse: the old truthy-ing accepted "true"/"false" and
+    # silently INVERTED "false"; now anything but 0/1 raises
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "true")
+    with pytest.raises(ValueError, match="REPRO_PALLAS_INTERPRET"):
+        common.use_interpret()
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "false")
+    with pytest.raises(ValueError, match="expected '0' or '1'"):
+        common.use_interpret()
+    # empty string == unset (the shell's way of clearing a knob)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "")
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
     assert common.use_interpret() is True
 
 
