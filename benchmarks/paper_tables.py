@@ -3,13 +3,32 @@
 Each ``fig*/table*`` function prints CSV rows (name,value,derived) and
 returns a dict for tests. See EXPERIMENTS.md §Paper-validation for the
 rendered tables + error analysis.
+
+Run as a module this also writes ``BENCH_paper_tables.json`` — the
+repro's *fidelity* artifact. Every row is analytic (gate counts and the
+calibrated silicon model; no timing, so the numbers are deterministic
+across machines), and the committed full-size artifact rides the same
+hard trend gate as the perf baselines: a PR whose model drifts a
+committed area/power/gate-count row >25% upward fails bench-trend. The
+headline Catwalk-vs-SRM0-RNL ratios (1.39x area / 1.86x power at n=64)
+are additionally asserted here at the paper's tolerance, so a fidelity
+regression fails the bench run itself — in bench-smoke and nightly —
+before any trend comparison (DESIGN.md §3.7).
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit
+import argparse
+
+from benchmarks.common import emit, note_meta, reset_results, write_json
 from repro.core import hwcost
 from repro.core.topk_prune import topk_network
+
+#: paper-claim tolerance for the n=64 headline ratios (mirrors
+#: tests/test_hwcost.py::test_headline_ratios and the artifact regression
+#: test in tests/test_paper_tables.py)
+HEADLINE_AREA, HEADLINE_AREA_TOL = 1.39, 0.05
+HEADLINE_POWER, HEADLINE_POWER_TOL = 1.86, 0.07
 
 
 def fig5_topk_pruning() -> dict:
@@ -60,7 +79,7 @@ def fig6b_dendrite_gates() -> dict:
 
 def fig7_topk_cost(model=None) -> dict:
     """Fig. 7: synthesized area/power of unary top-k across n, k."""
-    model = model or hwcost.calibrate()
+    model = model or hwcost.calibrated()
     out = {}
     for n in (4, 8, 16, 32, 64):
         for k in (2, n):
@@ -78,7 +97,7 @@ def fig7_topk_cost(model=None) -> dict:
 
 def fig8_dendrite_cost(model=None) -> dict:
     """Fig. 8: dendrite area/power, four designs, k=2."""
-    model = model or hwcost.calibrate()
+    model = model or hwcost.calibrated()
     out = {}
     for n in (16, 32, 64):
         for d in ("pc_conventional", "pc_compact", "sorting_pc", "catwalk"):
@@ -93,7 +112,7 @@ def fig8_dendrite_cost(model=None) -> dict:
 
 def fig9_neuron_cost(model=None) -> dict:
     """Fig. 9: full-neuron synthesis (dendrite+soma+axon), k=2."""
-    model = model or hwcost.calibrate()
+    model = model or hwcost.calibrated()
     out = {}
     for n in (16, 32, 64):
         for d in ("pc_conventional", "pc_compact", "sorting_pc", "catwalk"):
@@ -107,7 +126,7 @@ def fig9_neuron_cost(model=None) -> dict:
 def table1_pnr(model=None) -> dict:
     """Table I: P&R area/power, model vs paper, with error and the
     headline Catwalk-vs-compact ratios."""
-    model = model or hwcost.calibrate()
+    model = model or hwcost.calibrated()
     out = {"rows": {}, "ratios": {}}
     errs = []
     for n, rows in hwcost.TABLE1.items():
@@ -131,23 +150,53 @@ def table1_pnr(model=None) -> dict:
                   hwcost.TABLE1[n]["pc_compact"][2]
                   / hwcost.TABLE1[n]["catwalk"][2])
         out["ratios"][n] = (ar, pr)
-        emit(f"table1/ratio_n{n}", f"{ar:.2f}x_area_{pr:.2f}x_power",
-             f"paper={pa:.2f}x/{pp:.2f}x")
+        # Numeric rows (one per ratio) so trend.py's hard gate sees them;
+        # the old combined "1.39x_area_1.86x_power" string row was invisible
+        # to numeric_rows().
+        emit(f"table1/ratio_area_n{n}", round(ar, 4), f"paper={pa:.2f}x")
+        emit(f"table1/ratio_power_n{n}", round(pr, 4), f"paper={pp:.2f}x")
     mean_err = sum(errs) / len(errs)
     out["mean_abs_err"] = mean_err
     emit("table1/mean_abs_err", round(mean_err * 100, 2), "percent")
     return out
 
 
-def main() -> None:
+def check_headline(ratios: dict) -> None:
+    """Raise if the n=64 Catwalk-vs-compact ratios drift off the paper's
+    1.39x area / 1.86x power claim — the bench run itself is the fidelity
+    gate, independent of the trend comparison."""
+    ar, pr = ratios[64]
+    if abs(ar - HEADLINE_AREA) > HEADLINE_AREA_TOL:
+        raise AssertionError(
+            f"area ratio n=64 drifted: model {ar:.3f}x vs paper "
+            f"{HEADLINE_AREA:.2f}x (tol {HEADLINE_AREA_TOL})")
+    if abs(pr - HEADLINE_POWER) > HEADLINE_POWER_TOL:
+        raise AssertionError(
+            f"power ratio n=64 drifted: model {pr:.3f}x vs paper "
+            f"{HEADLINE_POWER:.2f}x (tol {HEADLINE_POWER_TOL})")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="mark the artifact as a smoke run (the tables are "
+                    "analytic and already instant; sizes do not shrink)")
+    args = ap.parse_args(argv)
+    reset_results()
     fig5_topk_pruning()
     fig6a_topk_gates()
     fig6b_dendrite_gates()
-    m = hwcost.calibrate()
+    m = hwcost.calibrated()
     fig7_topk_cost(m)
     fig8_dendrite_cost(m)
     fig9_neuron_cost(m)
-    table1_pnr(m)
+    t1 = table1_pnr(m)
+    check_headline(t1["ratios"])
+    note_meta(calibrate_k=2,
+              headline_area_ratio=round(t1["ratios"][64][0], 4),
+              headline_power_ratio=round(t1["ratios"][64][1], 4),
+              mean_abs_err_pct=round(t1["mean_abs_err"] * 100, 2))
+    write_json("paper_tables", smoke=args.smoke)
 
 
 if __name__ == "__main__":

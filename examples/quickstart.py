@@ -48,7 +48,7 @@ def main():
           f"(clip events: {int(cw.clip_events)})")
 
     # -- 4. silicon cost ---------------------------------------------------
-    model = hwcost.calibrate()
+    model = hwcost.calibrated()
     for d in ("pc_compact", "catwalk"):
         r = model.neuron_report(d, 64, k)
         print(f"{d:12s} n=64: {r['area_um2']:6.1f} um^2  "

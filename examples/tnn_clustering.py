@@ -44,7 +44,7 @@ def main():
     key = jax.random.PRNGKey(0)
     volleys, labels = make_stream(jax.random.PRNGKey(42), args.volleys)
     scfg = stdp.STDPConfig(mu_capture=1.0, mu_backoff=1.0, mu_search=0.5)
-    model = hwcost.calibrate()
+    model = hwcost.calibrated()
 
     for dendrite, thr, k in (("pc_compact", 18, 2), ("catwalk", 12, 2)):
         cfg = layer.TNNLayer(n_columns=1, rf_size=16, n_neurons=3,

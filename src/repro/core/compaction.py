@@ -53,9 +53,9 @@ def measured_density(times, t_steps: int | None = None):
 
     With ``t_steps`` given, "active" means contributing-within-the-cycle
     (``times < t_steps``); without it, simply non-``NO_SPIKE``. Returns a
-    Python float so host-side policy code (``resolve_backend``, the serve
-    engine) can branch on it; under ``jit`` the value is unknowable, hence
-    ``None``.
+    Python float so host-side policy code (:mod:`repro.core.policy`, the
+    serve engine) can branch on it; under ``jit`` the value is unknowable,
+    hence ``None``.
     """
     if compat.is_tracer(times):
         return None
@@ -74,6 +74,25 @@ def max_active(times, t_steps: int):
     if mask.size == 0:
         return 0
     return int(jnp.max(jnp.sum(mask.astype(jnp.int32), axis=-1)))
+
+
+def active_stats(times, t_steps: int):
+    """``(density, max_active)`` from one activity mask, ``(None, None)``
+    under tracing.
+
+    The cost-driven policy (:mod:`repro.core.policy`) needs both: density
+    ranks engines, the per-volley max picks the compaction bucket. One
+    mask serves both so the host-side measurement stays a single pass.
+    """
+    if compat.is_tracer(times):
+        return None, None
+    times = jnp.asarray(times)
+    if times.size == 0:
+        return 0.0, 0
+    mask = active_mask(times, t_steps).astype(jnp.int32)
+    per_volley = jnp.sum(mask, axis=-1)
+    return (float(jnp.mean(mask.astype(jnp.float32))),
+            int(jnp.max(per_volley)))
 
 
 #: Vector-lane width the compacted-shape ladder aligns to at/above one

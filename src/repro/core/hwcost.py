@@ -35,6 +35,7 @@ Algorithm-1 gate counts (Fig. 5 / Fig. 6) are reported unmodeled.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import Counter
 from typing import Dict
 
@@ -324,3 +325,12 @@ def calibrate(k: int = 2) -> CostModel:
                             * 1e-15 * CLOCK_HZ * 1e6)
     return dataclasses.replace(m, alpha_pc=alpha_pc, alpha_cas=alpha_cas,
                                alpha_seq=alpha_seq)
+
+
+@functools.lru_cache(maxsize=None)
+def calibrated(k: int = 2) -> CostModel:
+    """Memoized :func:`calibrate` — the model is deterministic in ``k``,
+    and hot-path consumers (the engine policy's tables, per-step serve
+    resolution, the paper-table regression suite) must not re-fit it per
+    call. CostModel is frozen, so sharing the instance is safe."""
+    return calibrate(k)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coding, compaction, neuron, stdp
+from repro.core import policy as engine_policy
 from repro.sharding import compat
 from repro.sharding import specs as sharding_specs
 
@@ -82,6 +83,13 @@ class TNNLayer:
     stdp: stdp.STDPConfig = dataclasses.field(default_factory=stdp.STDPConfig)
     #: minibatch STDP reduction: "mean" (default) or "sum".
     stdp_reduction: str = "mean"
+    #: engine-selection policy for ``backend="auto"`` (DESIGN.md §3.7):
+    #: None = the memoized cost-driven default
+    #: (:func:`repro.core.policy.default_policy`);
+    #: :func:`repro.core.policy.density_policy` restores the legacy
+    #: threshold. EnginePolicy is frozen/hashable, so the layer config
+    #: stays a valid static jit key.
+    policy: Optional[engine_policy.EnginePolicy] = None
 
     @property
     def stride(self) -> int:
@@ -175,7 +183,8 @@ def layer_input_density(volleys: jax.Array, cfg: TNNLayer,
 
     Overlapping fields count shared lines once per column — this is the
     density the neuron banks actually see, the quantity the ``auto``
-    backend policy branches on (:func:`repro.core.neuron.resolve_backend`).
+    engine policy ranks candidates at
+    (:meth:`repro.core.policy.EnginePolicy.resolve`).
     """
     if compat.is_tracer(volleys):
         return None
@@ -225,7 +234,8 @@ def layer_forward(weights: jax.Array, volleys: jax.Array, cfg: TNNLayer,
     times_rf = sharding_specs.maybe_wsc(times_rf, _COL, _DP, None)
     fire = neuron.fire_times_bank(times_rf, w_int, cfg.neuron_config(),
                                   backend=cfg.backend,
-                                  n_active_max=cfg.n_active_max)  # (C, B, Q)
+                                  n_active_max=cfg.n_active_max,
+                                  policy=cfg.policy)              # (C, B, Q)
     fire = sharding_specs.maybe_wsc(fire, _COL, _DP, None)
     fire = jnp.swapaxes(fire, 0, 1)                           # (B, C, Q)
     # vectorized 1-WTA over the (B, C) plane; argmin's first-minimum rule

@@ -63,9 +63,10 @@ class TNNNetwork:
     @property
     def column_counts(self) -> Tuple[int, ...]:
         """Per-layer column counts — the shape input to the Pallas mesh
-        capability check (:func:`repro.core.neuron.pallas_shardable`);
-        callers resolving one engine for the whole stack (the serve
-        engine) pass this to ``resolve_backend``/``effective_engine``."""
+        capability check; callers resolving one engine for the whole
+        stack (the serve engine) pass this as
+        ``EnginePolicy.resolve(column_counts=...)`` so the Pallas engines
+        degrade exactly when some layer cannot tile the mesh."""
         return tuple(lc.n_columns for lc in self.layers)
 
 

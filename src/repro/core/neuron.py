@@ -37,25 +37,28 @@ spike-compacted volleys (core/compaction.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Literal, Optional, Union
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import _deprecation
 from repro.core import coding, compaction, unary_ops
+from repro.core import policy as engine_policy
 from repro.core.topk_prune import topk_network
 from repro.sharding import compat
 from repro.sharding import specs as sharding_specs
 
 DendriteKind = Literal["pc_conventional", "pc_compact", "sorting_pc", "catwalk"]
 
-Backend = Literal["auto", "scan", "closed_form", "event", "pallas",
-                  "pallas_compact"]
+# Engine names and the ambient-capability probes are canonical in
+# repro.core.policy (the cost-driven selection entry point, DESIGN.md
+# §3.7); re-exported here so the neuron-bank API surface stays complete.
+Backend = engine_policy.Backend
 
-#: ``auto`` picks the event engine off-TPU when the measured fraction of
-#: contributing input lines is at or below this (DESIGN.md §3.3 decision
-#: table). Above it the dense closed form's vectorization wins.
-DENSITY_EVENT_MAX = 0.25
+#: Legacy ``auto`` threshold (the density-mode escape hatch; the default
+#: cost mode replaces it with the calibrated work model — DESIGN.md §3.7).
+DENSITY_EVENT_MAX = engine_policy.DENSITY_EVENT_MAX
 
 #: Axon output pulse length in ticks (Fig. 4a: 8-cycle pulse counter).
 AXON_PULSE_TICKS = 8
@@ -275,111 +278,55 @@ def clip_k(cfg: NeuronConfig) -> Optional[int]:
     return cfg.k if cfg.dendrite in ("sorting_pc", "catwalk") else None
 
 
-def pallas_available() -> bool:
-    """Whether the fused Pallas neuron-bank kernel can run here.
+# capability probes: canonical in repro.core.policy, re-exported verbatim
+# (not deprecated — they are ambient-environment facts, not policy)
+pallas_available = engine_policy.pallas_available
+mesh_active = engine_policy.mesh_active
 
-    True on a TPU backend (Mosaic lowering) and on CPU via the Pallas
-    interpreter (bit-accurate, slow — fine for tests, wrong choice for
-    training loops, hence the ``auto`` policy below).
-    """
-    try:
-        from repro.kernels import rnl_neuron  # noqa: F401
-        return True
-    except Exception:  # pragma: no cover - pallas/toolchain missing
-        return False
-
-
-def mesh_active() -> bool:
-    """Whether an ambient device mesh is entered (compat.set_mesh).
-
-    Under an active mesh engine selection runs the per-kernel capability
-    check (:func:`pallas_shardable`): Pallas engines whose column stack
-    tiles the mesh's ``column`` axis run through the shard_map wrappers
-    (:mod:`repro.kernels.rnl_shard`); the rest degrade to the bit-exact
-    jnp engines, which are sharding-transparent and keep the layout the
-    layer constraints pin (DESIGN.md §6.4).
-    """
-    am = compat.get_abstract_mesh()
-    return am is not None and bool(am.axis_names)
+ColumnCounts = engine_policy.ColumnCounts
 
 
 def pallas_shardable(n_columns: Optional[int]) -> bool:
-    """Per-kernel mesh capability of the Pallas engines (DESIGN.md §6.4).
+    """Deprecated: use :meth:`repro.core.policy.EnginePolicy.resolve`,
+    whose mesh degradation exposes the same capability check — e.g.
+    ``resolve("pallas", column_counts=n).engine == "pallas"``.
 
-    True when no mesh is active (plain single-device launch). Under a
-    mesh, the shard_map fast path needs a 3-D column stack whose column
-    count tiles the mesh's ``column`` axis:
-
-      * ``n_columns is None`` (a 2-D ``(B, n)`` bank, no column axis to
-        shard over) -> False;
-      * mesh without a ``column`` axis -> False (nothing to map over);
-      * otherwise ``n_columns %% column-axis-size == 0``.
-
-    When this returns False the engines degrade exactly as the pre-shard
-    replication fallback did (:func:`effective_engine`).
+    Semantics preserved verbatim (DESIGN.md §6.4): True when no mesh is
+    active; under a mesh, True iff the column stack tiles the mesh's
+    ``column`` axis.
     """
-    if not mesh_active():
-        return True
-    if n_columns is None:
-        return False
-    am = compat.get_abstract_mesh()
-    if sharding_specs.TNN_COLUMN_AXIS not in (am.axis_names or ()):
-        return False
-    return n_columns % sharding_specs.tnn_column_size() == 0
-
-
-ColumnCounts = Union[int, Iterable[int], None]
+    _deprecation.warn_deprecated("pallas_shardable",
+                                 "policy.EnginePolicy.resolve")
+    return engine_policy._pallas_shardable(n_columns)
 
 
 def effective_engine(engine: str,
                      column_counts: ColumnCounts = None) -> str:
-    """The engine :func:`fire_times_bank` will actually run for ``engine``
-    given the ambient mesh. The Pallas engines pass through when every
-    column count in ``column_counts`` is :func:`pallas_shardable` (the
-    shard_map fast path serves them); otherwise — replication fallback, a
-    2-D bank, or an unknown shape (``column_counts=None``) — they degrade
-    to the bit-exact jnp engine of the same sparsity class, exactly the
-    pre-shard behavior. Everything else passes through unconditionally.
-
-    ``column_counts`` is one count (a single bank call), an iterable of
-    per-layer counts (the serve engine resolving for a whole network), or
-    ``None`` for "shape unknown" (conservative: degrade under a mesh).
-    Callers that report per-engine stats (the serve engine) use this so
-    observability matches execution.
+    """Deprecated: use :meth:`repro.core.policy.EnginePolicy.resolve` —
+    ``resolve(engine, column_counts=...).engine`` is the post-degradation
+    engine this returned. Semantics preserved verbatim (DESIGN.md §6.4).
     """
-    if engine not in ("pallas", "pallas_compact") or not mesh_active():
-        return engine
-    if column_counts is not None:
-        counts = ((column_counts,) if isinstance(column_counts, int)
-                  else tuple(column_counts))
-        if counts and all(pallas_shardable(c) for c in counts):
-            return engine
-    return "event" if engine == "pallas_compact" else "closed_form"
+    _deprecation.warn_deprecated("effective_engine",
+                                 "policy.EnginePolicy.resolve")
+    return engine_policy._effective_engine(engine, column_counts)
 
 
 def resolve_backend(backend: Backend, density: Optional[float] = None,
                     column_counts: ColumnCounts = None) -> str:
-    """Resolve ``auto`` to a concrete engine; explicit names pass through.
+    """Deprecated: use :meth:`repro.core.policy.EnginePolicy.resolve`.
 
-    Policy (DESIGN.md §3.3 decision table): on TPU the fused Pallas kernel
-    is the fast path — including inside a mesh scope, whenever the column
-    counts clear the :func:`pallas_shardable` capability check (the
-    shard_map wrappers run it per column tile). Off-TPU, a *measured*
-    input density at or below :data:`DENSITY_EVENT_MAX` picks the event
-    engine (its O(s log s) breakpoint solve beats the dense O(T·n) closed
-    form exactly when few lines carry spikes); otherwise the vectorized
-    closed form. ``density`` is the fraction of contributing lines (see
-    :func:`repro.core.compaction.measured_density`) — pass ``None`` when
-    unknown (e.g. under jit), which keeps the dense choice.
+    Delegates to the legacy density-threshold policy
+    (:func:`repro.core.policy.density_policy`) so the documented contract
+    is preserved bit-for-bit: explicit names pass through, TPU preempts
+    with the Pallas kernel, and off-TPU a measured density at or below
+    :data:`DENSITY_EVENT_MAX` picks the event engine. The cost-driven
+    default policy (DESIGN.md §3.7) supersedes the threshold — new code
+    should resolve through an :class:`repro.core.policy.EnginePolicy`.
     """
-    if backend != "auto":
-        return backend
-    if jax.default_backend() == "tpu" and pallas_available() \
-            and effective_engine("pallas", column_counts) == "pallas":
-        return "pallas"
-    if density is not None and density <= DENSITY_EVENT_MAX:
-        return "event"
-    return "closed_form"
+    _deprecation.warn_deprecated("resolve_backend",
+                                 "policy.EnginePolicy.resolve")
+    return engine_policy.density_policy().resolve(
+        backend, density=density, column_counts=column_counts).requested
 
 
 # repro-lint: unplaced (shape normalization only; caller pins after)
@@ -406,7 +353,9 @@ def _bank_shapes(times: jax.Array, weights: jax.Array):
 
 def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
                     backend: Backend = "auto",
-                    n_active_max: Optional[int] = None) -> jax.Array:
+                    n_active_max: Optional[int] = None,
+                    policy: Optional[engine_policy.EnginePolicy] = None
+                    ) -> jax.Array:
     """Fire times of a neuron bank: every volley through every neuron.
 
     This is the single entry point the column/layer stack builds on; all
@@ -435,9 +384,10 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
         active lines relocated to a dense prefix of width ``n_active_max``
         and weights gathered to match — the software analogue of the
         paper's unary top-k relocation.
-      * ``"auto"``        — pallas on TPU; off-TPU the event engine when
-        the measured density is at most :data:`DENSITY_EVENT_MAX`, else
-        the closed form (:func:`resolve_backend`).
+      * ``"auto"``        — pallas on TPU; off-TPU the engine the policy
+        predicts cheapest at the measured activity (cost mode, the
+        default) or the :data:`DENSITY_EVENT_MAX` threshold pick (density
+        mode) — see :class:`repro.core.policy.EnginePolicy`.
 
     Args:
       times:   (B, n) int32 spike volleys — or (C, B, n) for C independent
@@ -454,6 +404,10 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
         engine falls back to the uncompacted (still T-independent) solve
         and ``pallas_compact`` requires it — traced callers must guarantee
         the width covers the batch (:func:`compaction.bucket_width`).
+      policy: engine-selection policy for ``backend="auto"``; ``None``
+        uses the memoized cost-driven default
+        (:func:`repro.core.policy.default_policy`). Explicit backends
+        ignore it.
 
     Returns:
       (B, Q) int32 fire times (NO_SPIKE = silent), or (C, B, Q) for 3-D
@@ -469,26 +423,26 @@ def fire_times_bank(times: jax.Array, weights: jax.Array, cfg: NeuronConfig,
         times = sharding_specs.maybe_wsc(times, col, dp, None)
         weights = sharding_specs.maybe_wsc(weights, col, None, None)
     k = clip_k(cfg)
-    # measure density only where the policy can use it: explicit backends
-    # ignore it, and when resolve_backend will pick pallas before looking
-    # (TPU with the kernel importable, capability check clear) skip the
-    # reduction + host sync
-    density = None
-    if backend == "auto" and not (
-            jax.default_backend() == "tpu" and pallas_available()
-            and effective_engine("pallas", n_columns) == "pallas"):
-        density = compaction.measured_density(times, cfg.t_steps)
+    pol = policy if policy is not None else engine_policy.default_policy()
+    # measure activity only where the policy can use it: explicit backends
+    # ignore it, and when the TPU Pallas fast path preempts (kernel
+    # importable, capability check clear) skip the reduction + host sync
+    density = s_active = None
+    if pol.wants_density(backend, n_columns):
+        density, s_active = compaction.active_stats(times, cfg.t_steps)
     # Pallas under an active mesh: shardable column stacks run through the
     # shard_map wrappers below; everything else (2-D banks, non-dividing
     # C — the replication fallback) degrades to the bit-exact jnp engine
     # of the same sparsity class (DESIGN.md §6.4).
-    engine = effective_engine(
-        resolve_backend(backend, density=density, column_counts=n_columns),
-        column_counts=n_columns)
+    shape = engine_policy.BankShape(
+        pairs=(n_columns or 1) * times.shape[-2] * weights.shape[-2],
+        n_lines=times.shape[-1], t_steps=cfg.t_steps)
+    engine = pol.resolve(backend, density=density, max_active=s_active,
+                         column_counts=n_columns, shape=shape).engine
 
     if engine in ("pallas", "pallas_compact"):
         # an explicit pallas request must not silently degrade — only
-        # "auto" falls back (resolve_backend already guards availability)
+        # "auto" falls back (the policy already guards availability)
         from repro.kernels import rnl_neuron
         if times.ndim not in (2, 3):
             raise ValueError(f"{engine} backend supports (B, n) or "

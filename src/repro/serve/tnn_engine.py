@@ -98,6 +98,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from repro.core import coding, compaction, network, neuron
+from repro.core import policy as engine_policy
 from repro.serve import slots
 from repro.sharding import compat
 from repro.sharding import specs as sharding_specs
@@ -117,12 +118,19 @@ class TNNServeConfig:
     n_slots: int = 8
     #: fire_times_bank engine for every layer: scan | closed_form | event |
     #: pallas | auto. ``auto`` re-resolves every step from the *measured*
-    #: batch density (host-side, before the jit boundary): pallas on TPU,
-    #: else the event engine when the fraction of contributing lines is at
-    #: most ``neuron.DENSITY_EVENT_MAX`` — NO_SPIKE-padded slot batches are
-    #: exactly the sparse case it wins on — else the closed form. All
-    #: engines are bit-exact, so the policy never changes outputs.
+    #: batch activity (host-side, before the jit boundary) through the
+    #: configured ``policy`` — NO_SPIKE-padded slot batches are exactly
+    #: the sparse case the event engine wins on. All engines are
+    #: bit-exact, so the policy never changes outputs.
     backend: neuron.Backend = "auto"
+    #: how ``auto`` picks: ``"cost"`` (default) ranks engines and
+    #: compaction widths by the calibrated analytic predictor
+    #: (:func:`repro.core.policy.default_policy`, memoized — per-step
+    #: resolution is a handful of float ops); ``"density"`` is the legacy
+    #: ``DENSITY_EVENT_MAX`` threshold escape hatch; or a custom
+    #: :class:`repro.core.policy.EnginePolicy`. Validated at construction
+    #: like backend names (DESIGN.md §3.7).
+    policy: typing.Union[str, engine_policy.EnginePolicy] = "cost"
     #: gamma-cycle pipeline micro-batches per step (DESIGN.md §5.4): 1 =
     #: the barriered schedule; M > 1 streams the slot batch
     #: through the layer stack in M micro-batches
@@ -264,6 +272,10 @@ class TNNEngine:
             if name not in valid:
                 raise ValueError(
                     f"{where}={name!r}: expected one of {valid}")
+        # policy validation mirrors the backend check: a typo'd policy
+        # spec fails here, not on the first step (get_policy raises); the
+        # memoized accessors make this free for the common string specs
+        self._policy = engine_policy.get_policy(scfg.policy)
         if scfg.backend != "auto":
             # pin only the layers that delegated the choice: explicit
             # per-layer backends are respected (mirrors _fwd_for)
@@ -323,19 +335,25 @@ class TNNEngine:
         self._stage_density_sums = [0.0] * self.n_stages
         self._fwd = jax.jit(self._forward_fn(net))
         #: per-layer column counts — the shape input to the Pallas mesh
-        #: capability check (neuron.pallas_shardable); resolution passes
-        #: it so a mesh + dividing columns keeps the shard_map fast path
+        #: capability check; EnginePolicy.resolve passes it so a mesh +
+        #: dividing columns keeps the shard_map fast path
         self._column_counts = net.column_counts
-        # density-less resolution = the engine self._fwd compiles to; the
-        # per-step density policy swaps in a sparse engine via _fwd_for
-        # (resolved inside the mesh scope with the network's column counts,
-        # so the Pallas engines survive exactly when every layer clears the
+        #: layer-0 bank workload for the cost predictor: every slot row
+        #: through every layer-0 neuron (the dominant bank; deeper layers
+        #: see post-WTA volleys, sparser by construction)
+        self._bank_shape = engine_policy.BankShape(
+            pairs=scfg.n_slots * net.layers[0].n_columns
+            * net.layers[0].n_neurons,
+            n_lines=net.layers[0].rf_total,
+            t_steps=net.layers[0].t_steps)
+        # activity-less resolution = the engine self._fwd compiles to; the
+        # per-step policy swaps in a sparse engine via _fwd_for (resolved
+        # inside the mesh scope with the network's column counts, so the
+        # Pallas engines survive exactly when every layer clears the
         # per-kernel capability check — DESIGN.md §6.4)
         with self._mesh_scope():
-            self._default_engine = neuron.effective_engine(
-                neuron.resolve_backend(
-                    scfg.backend, column_counts=self._column_counts),
-                column_counts=self._column_counts)
+            self._default_engine = self._policy.resolve(
+                scfg.backend, column_counts=self._column_counts).engine
         if scfg.max_jit_variants < 1:
             raise ValueError(
                 f"max_jit_variants must be >= 1, got {scfg.max_jit_variants}")
@@ -356,6 +374,10 @@ class TNNEngine:
         self._run_s = 0.0
         self._density_sum = 0.0
         self._backend_steps: Dict[str, int] = {}
+        # predicted-vs-chosen accounting: what the cost predictor wanted
+        # (pre mesh degradation) vs what ran, plus its runtime estimates
+        self._predicted_steps: Dict[str, int] = {}
+        self._predicted_us_sum: Dict[str, float] = {}
         # ---------------------------------- learning + durability (§5.5)
         if scfg.stdp_every < 1:
             raise ValueError(f"stdp_every must be >= 1, got "
@@ -576,6 +598,8 @@ class TNNEngine:
         self._density_sum = 0.0
         self._stage_density_sums = [0.0] * self.n_stages
         self._backend_steps = {}
+        self._predicted_steps = {}
+        self._predicted_us_sum = {}
         self.pool.n_retired = 0
         self.pool.n_rejected = 0
         self.pool.n_submitted = self.pool.n_live + self.pool.n_pending
@@ -660,13 +684,12 @@ class TNNEngine:
             for c, sh in zip(carry_np, self._carry_shardings)
         )
 
-    def _layer0_width(self, batch: np.ndarray) -> int:
-        """Bucketed max active-line count over the batch's layer-0
-        receptive fields — the static compaction width a sparse-engine
-        compile needs (exact measurement, so no active line can drop)."""
+    def _layer0_active(self, batch: np.ndarray) -> int:
+        """Max active-line count over the batch's layer-0 receptive
+        fields (exact measurement, so no active line can drop; the policy
+        buckets it onto the compaction ladder — ``width_for``)."""
         active = batch[:, self._rf0] < self._t_steps  # (B, C, rf)
-        s = int(active.sum(axis=-1).max()) if active.size else 0
-        return compaction.bucket_width(s)
+        return int(active.sum(axis=-1).max()) if active.size else 0
 
     def _fwd_for(
         self,
@@ -760,23 +783,31 @@ class TNNEngine:
                 self._stage_density_sums[i] += float(np.mean(batch[lo:hi] < self._t_steps))
         with self._mesh_scope():
             # resolution inside the mesh scope with the network's column
-            # counts: the auto policy sees the mesh AND the per-kernel
-            # capability (neuron.pallas_shardable), so the Pallas engines
-            # survive when every layer's columns tile the mesh and degrade
-            # only in the replication-fallback case; effective_engine maps
-            # the request to the engine that will actually run, so
-            # stats/jit-variants record the truth
-            engine = neuron.effective_engine(
-                neuron.resolve_backend(
-                    self.scfg.backend, density=density,
-                    column_counts=self._column_counts),
-                column_counts=self._column_counts)
+            # counts: the policy sees the mesh AND the per-kernel Pallas
+            # capability, so the Pallas engines survive when every layer's
+            # columns tile the mesh and degrade only in the replication-
+            # fallback case; Resolution.engine is what will actually run,
+            # so stats/jit-variants record the truth. The measured layer-0
+            # active count feeds both the cost ranking and the compaction
+            # bucket (width stays exact-covering: no active line drops).
+            res = self._policy.resolve(
+                self.scfg.backend, density=density,
+                max_active=self._layer0_active(batch),
+                column_counts=self._column_counts,
+                shape=self._bank_shape)
+            engine = res.engine
             self._density_sum += density
             self._backend_steps[engine] = self._backend_steps.get(engine, 0) + 1
+            if res.predicted_us:
+                want = min(res.predicted_us, key=res.predicted_us.__getitem__)
+                self._predicted_steps[want] = \
+                    self._predicted_steps.get(want, 0) + 1
+                for name, us in res.predicted_us.items():
+                    self._predicted_us_sum[name] = \
+                        self._predicted_us_sum.get(name, 0.0) + us
             # sparse engines compile against a static compaction width
-            # measured from this batch's own receptive-field view (exact,
-            # never drops)
-            width = self._layer0_width(batch) if engine in SPARSE_ENGINES else None
+            # bucketed from this batch's own receptive-field measurement
+            width = res.width if engine in SPARSE_ENGINES else None
             if self._learn_gate():
                 # STDP step: outputs at the pre-update weights (bit-exact
                 # with the inference path), new weights advance the
@@ -873,6 +904,16 @@ class TNNEngine:
                 out[f"density_stage{i}_mean"] = total / self.n_steps
         for engine, steps in self._backend_steps.items():
             out[f"steps_{engine}"] = float(steps)
+        # predicted-vs-chosen: which engine the cost predictor ranked
+        # cheapest each step (pre mesh degradation) and its mean runtime
+        # estimate — divergence from steps_<engine> means degradation or
+        # an explicit backend overrode the prediction (DESIGN.md §3.7)
+        out["policy_mode"] = 1.0 if self._policy.mode == "cost" else 0.0
+        for engine, steps in self._predicted_steps.items():
+            out[f"steps_predicted_{engine}"] = float(steps)
+        for engine, us in self._predicted_us_sum.items():
+            if self.n_steps > 0:
+                out[f"predicted_us_mean_{engine}"] = us / self.n_steps
         # compiled-variant accounting: live LRU entries + total drops (the
         # default compiled step is pinned outside the cache)
         out["jit_variants"] = float(len(self._fwd_alt))

@@ -1,0 +1,9 @@
+"""RPR009: the deprecated engine-resolution trio outside core/neuron.py."""
+
+
+def pick_engine(neuron, backend, density, n_columns):
+    engine = neuron.resolve_backend(backend, density, n_columns)
+    engine = neuron.effective_engine(engine, n_columns)
+    if not neuron.pallas_shardable(n_columns):
+        engine = "closed_form"
+    return engine

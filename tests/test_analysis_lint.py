@@ -22,6 +22,7 @@ CORPUS_SLUGS = {
     "bad_pallas_interpret.py": "pallas-interpret-literal",
     "core/bad_unplaced.py": "core-unplaced",
     "bad_raw_env.py": "raw-env",
+    "bad_deprecated_resolution.py": "deprecated-resolution",
 }
 
 

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import coding, neuron
+from repro.core import coding, neuron, policy
 
 DENDRITES = ("pc_conventional", "pc_compact", "sorting_pc", "catwalk")
 NO_SPIKE = int(coding.NO_SPIKE)
@@ -184,18 +184,41 @@ def test_event_catwalk_clip_changes_fire_time():
 
 
 # ------------------------------------------------------------- auto policy
-def test_resolve_backend_density_policy():
-    assert neuron.resolve_backend("auto", density=0.1) in ("event", "pallas")
+def test_density_mode_resolution_policy():
+    legacy = policy.density_policy()
+    assert legacy.resolve("auto", density=0.1).requested in \
+        ("event", "pallas")
     if jax.default_backend() == "cpu":
-        assert neuron.resolve_backend("auto", density=0.1) == "event"
-        assert neuron.resolve_backend(
-            "auto", density=neuron.DENSITY_EVENT_MAX) == "event"
-        assert neuron.resolve_backend("auto", density=0.9) == "closed_form"
-        assert neuron.resolve_backend("auto") == "closed_form"
+        assert legacy.resolve("auto", density=0.1).requested == "event"
+        assert legacy.resolve(
+            "auto", density=neuron.DENSITY_EVENT_MAX).requested == "event"
+        assert legacy.resolve("auto", density=0.9).requested == \
+            "closed_form"
+        assert legacy.resolve("auto").requested == "closed_form"
     # explicit choices are never overridden by density
-    assert neuron.resolve_backend("scan", density=0.01) == "scan"
-    assert neuron.resolve_backend("closed_form", density=0.01) == \
+    assert legacy.resolve("scan", density=0.01).engine == "scan"
+    assert legacy.resolve("closed_form", density=0.01).engine == \
         "closed_form"
+
+
+def test_cost_mode_resolution_policy():
+    """The default cost policy: sparse workloads pick the event engine,
+    the densest bucket flips to the closed form, unknown stays dense."""
+    pol = policy.default_policy()
+    shape = policy.BankShape(pairs=64 * 64, n_lines=64, t_steps=64)
+    if jax.default_backend() == "cpu":
+        sparse = pol.resolve("auto", density=0.1, shape=shape)
+        assert sparse.requested == "event"
+        assert sparse.width == 8
+        assert sparse.predicted_us["event"] < \
+            sparse.predicted_us["closed_form"]
+        dense = pol.resolve("auto", max_active=64, shape=shape)
+        assert dense.requested == "closed_form"
+        # unknown workload (tracing): the dense fallback, no prediction
+        blind = pol.resolve("auto")
+        assert blind.requested == "closed_form"
+        assert blind.predicted_us == {}
+    assert pol.resolve("scan", density=0.01, shape=shape).engine == "scan"
 
 
 def test_fire_times_bank_auto_engages_event_on_sparse_concrete_input():

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import coding, column, layer, network, neuron, stdp
+from repro.core import coding, column, layer, network, neuron, policy, stdp
 
 BACKENDS = ("scan", "closed_form", "pallas")
 DENDRITES = ("pc_conventional", "pc_compact", "sorting_pc", "catwalk")
@@ -63,10 +63,11 @@ def test_fire_times_bank_shape_validation():
                                jnp.zeros((3, 5, 8), jnp.int32), cfg)
 
 
-def test_resolve_backend_auto_cpu_is_closed_form():
+def test_resolve_auto_cpu_without_measurement_is_closed_form():
     if jax.default_backend() == "cpu":
-        assert neuron.resolve_backend("auto") == "closed_form"
-    assert neuron.resolve_backend("scan") == "scan"
+        assert policy.default_policy().resolve("auto").engine == \
+            "closed_form"
+    assert policy.default_policy().resolve("scan").engine == "scan"
 
 
 # ------------------------------------------------------------- rnl clip out

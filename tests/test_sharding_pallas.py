@@ -32,7 +32,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 #: column=4) host mesh.
 SETUP = """
     import dataclasses, jax, jax.numpy as jnp, numpy as np
-    from repro.core import coding, compaction, layer, network, neuron
+    from repro.core import coding, compaction, layer, network, neuron, policy
     from repro.sharding import compat
     from repro.sharding import specs as SH
 
@@ -180,9 +180,10 @@ def test_sharded_kernel_wrappers_and_capability_errors():
 
 def test_auto_resolves_to_pallas_under_mesh():
     """Acceptance criterion: under the 2x4 mesh with dividing C and a TPU
-    backend, ``resolve_backend("auto", ...)`` resolves to a Pallas engine
-    and the auto-dispatched bank output is bit-exact vs single-device
-    scan (interpret mode stands in for Mosaic on the host)."""
+    backend, ``EnginePolicy.resolve("auto", ...)`` resolves to a Pallas
+    engine and the auto-dispatched bank output is bit-exact vs
+    single-device scan (interpret mode stands in for Mosaic on the
+    host)."""
     print(_run("""
         cfgn = l1.neuron_config()
         times_rf = jnp.swapaxes(jnp.asarray(v)[:, l1.rf_index()], 0, 1)
@@ -192,10 +193,11 @@ def test_auto_resolves_to_pallas_under_mesh():
         with compat.set_mesh(mesh):
             jb, jax.default_backend = jax.default_backend, lambda: 'tpu'
             try:
-                assert neuron.resolve_backend(
-                    'auto', column_counts=8) == 'pallas'
-                assert neuron.resolve_backend(
-                    'auto', column_counts=(8, 4)) == 'pallas'
+                pol = policy.default_policy()
+                assert pol.resolve(
+                    'auto', column_counts=8).engine == 'pallas'
+                assert pol.resolve(
+                    'auto', column_counts=(8, 4)).engine == 'pallas'
                 got = neuron.fire_times_bank(times_rf, w, cfgn,
                                              backend='auto')
             finally:

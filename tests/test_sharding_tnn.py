@@ -21,7 +21,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 #: fallback), sparse volley batch, single-device reference outputs.
 SETUP = """
     import dataclasses, jax, jax.numpy as jnp, numpy as np
-    from repro.core import coding, layer, network, neuron
+    from repro.core import coding, layer, network, neuron, policy
     from repro.sharding import compat
     from repro.sharding import specs as SH
 
@@ -146,38 +146,44 @@ def test_pallas_mesh_capability_model():
         w = jnp.round(params[0]).astype(jnp.int32)
         ref = np.asarray(neuron.fire_times_bank(times_rf, w, cfgn,
                                                 backend='closed_form'))
+        pol = policy.default_policy()
         with compat.set_mesh(mesh):
             assert neuron.mesh_active()
-            # capability: C=8 tiles the 4-way column axis; C=5 and 2-D
-            # banks (no column axis) do not
-            assert neuron.pallas_shardable(8)
-            assert not neuron.pallas_shardable(5)
-            assert not neuron.pallas_shardable(None)
-            assert neuron.effective_engine('pallas', 8) == 'pallas'
-            assert neuron.effective_engine('pallas_compact', (8, 4)) == \\
+            # capability through resolve(): C=8 tiles the 4-way column
+            # axis; C=5 and 2-D banks (no column axis) degrade
+            assert pol.resolve('pallas', column_counts=8).engine == 'pallas'
+            assert pol.resolve(
+                'pallas_compact', column_counts=(8, 4)).engine == \\
                 'pallas_compact'
             # unknown / non-dividing shapes keep the old degradation
-            assert neuron.effective_engine('pallas') == 'closed_form'
-            assert neuron.effective_engine('pallas', 5) == 'closed_form'
-            assert neuron.effective_engine('pallas_compact', 5) == 'event'
+            assert pol.resolve('pallas').engine == 'closed_form'
+            assert pol.resolve('pallas', column_counts=5).engine == \\
+                'closed_form'
+            assert pol.resolve('pallas_compact', column_counts=5).engine \\
+                == 'event'
+            # degradation never rewrites the request
+            assert pol.resolve('pallas', column_counts=5).requested == \\
+                'pallas'
             # every engine stays bit-exact through the dispatch
             for backend in ('pallas', 'pallas_compact', 'auto'):
                 got = neuron.fire_times_bank(times_rf, w, cfgn,
                                              backend=backend)
                 np.testing.assert_array_equal(np.asarray(got), ref)
             # auto -> pallas needs a TPU backend AND the capability
-            assert neuron.resolve_backend('auto', column_counts=8) != \\
+            assert pol.resolve('auto', column_counts=8).requested != \\
                 'pallas'  # CPU here
             jb, jax.default_backend = jax.default_backend, lambda: 'tpu'
             try:
-                assert neuron.resolve_backend(
-                    'auto', column_counts=8) == 'pallas'
-                assert neuron.resolve_backend(
-                    'auto', column_counts=5, density=0.1) == 'event'
+                assert pol.resolve(
+                    'auto', column_counts=8).engine == 'pallas'
+                # non-dividing C on "TPU": no pallas; the legacy density
+                # mode then picks the event engine at sparse traffic
+                assert policy.density_policy().resolve(
+                    'auto', column_counts=5, density=0.1).engine == 'event'
             finally:
                 jax.default_backend = jb
         assert not neuron.mesh_active()
-        assert neuron.effective_engine('pallas') == 'pallas'
+        assert pol.resolve('pallas').engine == 'pallas'
         from repro.serve import tnn_engine
         # dividing columns (8, 4): the requested engine really runs and
         # stats() records it — no stale degradation row
